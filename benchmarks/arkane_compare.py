@@ -1,0 +1,57 @@
+"""Paper §V-B: B-spline evaluation vs ArKANe [13].
+
+(a) The paper's iso-area arithmetic: (P+1) FPMax FMA tiles (4 x 0.0081 mm^2)
+    fit 72 tabulated B-spline units (450 um^2) -> >=72x throughput at high M.
+(b) A software measurement of the same contrast on this host: tabulated LUT
+    evaluation vs recursive Cox-de Boor in JAX (wall-clock, jitted)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bspline as bs
+from repro.core import sa_model as sm
+
+
+def _time(f, *args, iters=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    # (a) paper arithmetic
+    units = sm.arkane_equiv_units(3)
+    n_in = 100_000
+    arkane_c = sm.arkane_cycles(n_in, G=5, P=3)
+    ours_c = sm.kansas_bspline_cycles(n_in, units)
+    rows.append(
+        (
+            "arkane.iso_area_speedup",
+            0.0,
+            f"units={units}(paper=72);speedup={arkane_c/ours_c:.1f}x;paper>=72x",
+        )
+    )
+    # (b) software contrast on this host
+    g = bs.SplineGrid(-1.0, 1.0, 5, 3)
+    x = jnp.asarray(np.random.RandomState(0).uniform(-1, 1, (65536,)).astype(np.float32))
+    lut = jnp.asarray(bs.build_lut(3, 256))
+    f_rec = jax.jit(lambda x: bs.cox_de_boor_dense(x, g))
+    f_lut = jax.jit(lambda x: bs.lut_basis_compact(x, g, lut)[0])
+    us_rec = _time(f_rec, x)
+    us_lut = _time(f_lut, x)
+    rows.append(
+        (
+            "arkane.software_lut_vs_recursive",
+            us_lut,
+            f"recursive_us={us_rec:.0f};lut_us={us_lut:.0f};"
+            f"speedup={us_rec/us_lut:.1f}x(host CPU, 64k inputs)",
+        )
+    )
+    return rows

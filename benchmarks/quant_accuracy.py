@@ -1,0 +1,86 @@
+"""Paper §V accuracy claim: "<1% accuracy drop for all the models (e.g.,
+MNIST-KAN drops from 96.58% to 96.0%)".
+
+Offline container -> MNIST stand-in is the synthetic class-conditional set
+from data/pipeline.py (labelled as such). We train the paper's MNIST-KAN
+[784, 64, 10] (G=10, P=3), then quantise every layer to the int8 LUT
+datapath (core/quantization.py) and report the fp32 vs int8 accuracy gap —
+the claim under test is the GAP, not the absolute number."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kan_layer as kl
+from repro.core import quantization as q
+from repro.data import pipeline as dp
+
+
+def train_mnist_kan(steps=250, bs=256, lr=3e-3, seed=0, G=10, P=3,
+                    layers=(784, 64, 10)):
+    cfg = kl.KANNetConfig(layers=layers, G=G, P=P)
+    params = kl.init_kan_net(jax.random.PRNGKey(seed), cfg)
+    # noise=2.4 puts the task in the paper's mid-90s accuracy regime so the
+    # int8 gap is actually stressed (noise=0.7 saturates at 100%)
+    Xtr, Ytr = dp.mnist_like(8192, seed=1, noise=2.4)
+    Xte, Yte = dp.mnist_like(2048, seed=2, noise=2.4)
+
+    def loss_fn(p, xb, yb):
+        logits = kl.kan_net_apply(p, xb, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, yb[:, None], axis=-1).mean()
+
+    @jax.jit
+    def step(p, m, v, t, xb, yb):
+        g = jax.grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
+        p = jax.tree.map(
+            lambda p_, m_, v_: p_ - lr * (m_ / 0.9999) / (jnp.sqrt(v_ / 0.9999) + 1e-8) * 1.0,
+            p, m, v,
+        )
+        return p, m, v
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rs = np.random.RandomState(0)
+    for t in range(steps):
+        idx = rs.randint(0, len(Xtr), bs)
+        params, m, v = step(params, m, v, t, jnp.asarray(Xtr[idx]), jnp.asarray(Ytr[idx]))
+    return cfg, params, (Xte, Yte)
+
+
+def accuracy_fp(cfg, params, X, Y):
+    logits = kl.kan_net_apply(params, jnp.asarray(X), cfg)
+    return float((jnp.argmax(logits, -1) == jnp.asarray(Y)).mean())
+
+
+def accuracy_int8(cfg, params, X, Y):
+    g = cfg.grid()
+    qlayers = [q.quantize_kan_layer(p, g) for p in params]
+    h = jnp.asarray(X)
+    for i, ql in enumerate(qlayers):
+        if i > 0:
+            h = jnp.tanh(h)
+        h = q.quantized_kan_forward(ql, h)
+    return float((jnp.argmax(h, -1) == jnp.asarray(Y)).mean())
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    cfg, params, (Xte, Yte) = train_mnist_kan()
+    acc_fp = accuracy_fp(cfg, params, Xte, Yte)
+    acc_q = accuracy_int8(cfg, params, Xte, Yte)
+    us = (time.perf_counter() - t0) * 1e6
+    drop = (acc_fp - acc_q) * 100
+    return [
+        (
+            "quant.mnist_kan_synthetic",
+            us,
+            f"fp32_acc={acc_fp*100:.2f}%;int8_acc={acc_q*100:.2f}%;"
+            f"drop={drop:.2f}pts;paper_drop=0.58pts;claim=<1pt;"
+            f"pass={abs(drop) < 1.0}",
+        )
+    ]

@@ -1,0 +1,113 @@
+"""Roofline table (brief deliverable (g)) from the dry-run artifacts.
+
+Per (arch x shape), single-pod mesh (256 chips), TPU v5e constants:
+    compute   = HLO_FLOPs_per_device / 197e12
+    memory    = HLO_bytes_per_device / 819e9
+    collective= collective_bytes_per_device / 50e9   (per-link ICI)
+
+FLOPs/bytes come from the cost-faithful compiles (__cost.json: loop-free
+graphs, R'=1,2 extrapolation — see launch/dryrun.py); collective bytes from
+the same. memory_analysis (fit proof) comes from the production compile.
+"""
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+ART = os.path.join(os.getcwd(), "artifacts", "dryrun")
+
+
+def load_cells():
+    cells = {}
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        base = os.path.basename(p)
+        if "__opt" in base:
+            continue  # hillclimb variants live in EXPERIMENTS.md SecPerf
+        with open(p) as f:
+            d = json.load(f)
+        key = (d["arch"], d["shape"], d["mesh"], "__cost" in base)
+        cells[key] = d
+    return cells
+
+
+def analytic_memory_s(arch: str, shape: str, n_dev: int) -> float | None:
+    """Fusion-aware analytic HBM lower bound (models/costs.py): XLA's
+    'bytes accessed' is pre-fusion and so an upper bound; the truth on a
+    real TPU sits between the two (EXPERIMENTS.md §Roofline)."""
+    try:
+        from repro import configs as _cfg
+        from repro.configs.common import SHAPES
+        from repro.models import costs as _costs
+
+        model = _cfg.get_config(arch).model
+        cell = SHAPES[shape]
+        b = _costs.analytic_hbm_bytes(
+            model, global_batch=cell.global_batch, seq=cell.seq_len,
+            mode=cell.mode, n_devices=n_dev,
+        )
+        return b / HBM_BW
+    except Exception:
+        return None
+
+
+def roofline_row(prod: dict, cost: dict | None) -> dict:
+    n_dev = prod["n_devices"]
+    flops = cost["flops"] if cost else prod["cost"]["flops"]
+    bytes_ = cost["bytes_accessed"] if cost else prod["cost"]["bytes_accessed"]
+    coll = (cost or prod)["collectives"].get("total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_m_lo = analytic_memory_s(prod["arch"], prod["shape"], n_dev)
+    t_x = coll / ICI_BW
+    # bottleneck call uses the geometric mean of the memory bounds when the
+    # analytic bound is available (upper bound alone overclassifies memory)
+    t_m_mid = (t_m * t_m_lo) ** 0.5 if t_m_lo else t_m
+    dom = max((t_c, "compute"), (t_m_mid, "memory"), (t_x, "collective"))
+    mf = cost.get("model_flops_global", 0.0) / n_dev if cost else 0.0
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "memory_s_lo": t_m_lo,
+        "collective_s": t_x,
+        "dominant": dom[1],
+        "model_flops_frac": (mf / flops) if flops and mf else None,
+        "peak_gb": prod["memory"]["peak_bytes"] / 1e9,
+        "roofline_frac": t_c / max(t_c, t_m_mid, t_x)
+        if max(t_c, t_m_mid, t_x) > 0 else 0.0,
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    cells = load_cells()
+    rows = []
+    seen = sorted({(a, s) for (a, s, m, c) in cells if m == "single" and not c})
+    for arch, shape in seen:
+        prod = cells.get((arch, shape, "single", False))
+        cost = cells.get((arch, shape, "single", True))
+        if prod is None:
+            continue
+        r = roofline_row(prod, cost)
+        mf = f"{r['model_flops_frac']:.2f}" if r["model_flops_frac"] else "-"
+        mlo = f"{r['memory_s_lo']:.3e}" if r["memory_s_lo"] else "-"
+        rows.append(
+            (
+                f"roofline.{arch}.{shape}",
+                0.0,
+                f"compute_s={r['compute_s']:.3e};memory_s_hi={r['memory_s']:.3e};"
+                f"memory_s_lo={mlo};"
+                f"collective_s={r['collective_s']:.3e};dominant={r['dominant']};"
+                f"useful_frac={mf};peak_gb={r['peak_gb']:.2f};"
+                f"roofline_frac={r['roofline_frac']:.3f}",
+            )
+        )
+    n_multi = len([1 for (a, s, m, c) in cells if m == "multi" and not c])
+    n_single = len([1 for (a, s, m, c) in cells if m == "single" and not c])
+    rows.append(
+        ("roofline.coverage", 0.0,
+         f"single_pod_cells={n_single};multi_pod_cells={n_multi}")
+    )
+    return rows

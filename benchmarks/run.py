@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline).
+
+Prints ``name,us_per_call,derived`` CSV (brief deliverable (d))."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        app_utilization,
+        arkane_compare,
+        kan_paths,
+        pe_energy,
+        quant_accuracy,
+        roofline,
+        sa_sweep,
+        workloads,
+    )
+
+    suites = [
+        ("tableI", pe_energy),
+        ("fig7", sa_sweep),
+        ("fig8", app_utilization),
+        ("secVB", arkane_compare),
+        ("tableII", workloads),
+        ("quant", quant_accuracy),
+        ("kanpaths", kan_paths),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name}.ERROR,0,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

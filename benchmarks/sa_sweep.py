@@ -1,0 +1,47 @@
+"""Paper Fig 7a/7b: average PE utilization and runtime (cycles) vs
+post-synthesis area, conventional SA vs KAN-SAs, sweeping array sizes.
+
+Setup per the paper: int8/int32 PEs, G=5, P=3 fixed (-> 4:8 N:M PEs),
+averaged over all Table-II workloads except MNIST-KAN (G=10)."""
+
+import time
+
+from repro.core import sa_model as sm
+
+SIZES = [(2, 2), (4, 4), (8, 8), (16, 16), (32, 32), (64, 64)]
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    apps = sm.paper_workloads(64, fixed_gp=(5, 3))
+    wls = [w for name, ws in apps.items() if name != "MNIST-KAN" for w in ws]
+    rows = []
+    for R, C in SIZES:
+        conv = sm.run_suite(sm.SAConfig(R, C, "scalar"), wls)
+        kans = sm.run_suite(sm.SAConfig(R, C, "nm", N=4, M=8), wls)
+        a_c = sm.SAConfig(R, C, "scalar").area_mm2()
+        a_k = sm.SAConfig(R, C, "nm", N=4, M=8).area_mm2()
+        rows.append(
+            (
+                f"fig7.{R}x{C}",
+                0.0,
+                f"conv_util={conv.utilization*100:.1f}%;conv_area={a_c:.3f}mm2;"
+                f"conv_cycles={conv.cycles:.3g};"
+                f"kansas_util={kans.utilization*100:.1f}%;kansas_area={a_k:.3f}mm2;"
+                f"kansas_cycles={kans.cycles:.3g}",
+            )
+        )
+    # headline: iso-area runtime ratio (16x16 KAN-SAs vs 32x32 scalar)
+    conv = sm.run_suite(sm.SAConfig(32, 32, "scalar"), wls)
+    kans = sm.run_suite(sm.SAConfig(16, 16, "nm", N=4, M=8), wls)
+    ratio = conv.cycles / kans.cycles
+    us = (time.perf_counter() - t0) * 1e6 / (len(SIZES) + 1)
+    rows.append(
+        (
+            "fig7.iso_area_runtime",
+            us,
+            f"cycles_ratio={ratio:.2f}x;paper=~2x;"
+            f"kansas_util_min={min(float(r[2].split('kansas_util=')[1].split('%')[0]) for r in rows):.0f}%",
+        )
+    )
+    return rows

@@ -1,0 +1,44 @@
+"""End-to-end LM training driver (brief deliverable (b)): train the
+kanformer (the paper's technique as the FFN of a decoder LM) on the
+deterministic synthetic LM stream, with checkpoint/resume.
+
+The full kanformer-100m config is CPU-prohibitive for hundreds of steps, so
+the default here is the reduced config (same code path as the full one —
+select it with --full on real hardware). A few hundred steps reach a clearly
+decreasing loss; the run double-checks resume-from-checkpoint equivalence.
+
+    PYTHONPATH=src python examples/lm_train.py [--steps 300] [--full]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.launch import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    ckpt = tempfile.mkdtemp(prefix="kanformer_ckpt_")
+    argv = [
+        "--arch", "kanformer-100m",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64", "--lr", "2e-3",
+        "--ckpt-dir", ckpt, "--ckpt-every", str(max(50, args.steps // 4)),
+        "--log-every", "20",
+    ]
+    if not args.full:
+        argv.append("--reduced")
+    rc = T.main(argv)
+    # demonstrate restart-from-checkpoint: run 20 more steps resuming
+    print("\n[restart drill] resuming from latest checkpoint ...")
+    rc2 = T.main(argv[:3] + [str(args.steps + 20)] + argv[4:])
+    shutil.rmtree(ckpt, ignore_errors=True)
+    return rc or rc2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+10 assigned architectures (exact published configs) + the paper-technique
+kanformer. Each module exposes ``config()`` (full) and ``reduced()`` (smoke).
+"""
+
+import importlib
+
+ARCHS = {
+    "zamba2-1.2b": "zamba2_1_2b",
+    "musicgen-large": "musicgen_large",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "paligemma-3b": "paligemma_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v2-lite": "deepseek_v2_lite",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "kanformer-100m": "kanformer_100m",
+}
+
+ASSIGNED = [a for a in ARCHS if a != "kanformer-100m"]
+
+
+def _module(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[name]}")
+
+
+def get_config(name: str):
+    return _module(name).config()
+
+
+def get_reduced(name: str):
+    return _module(name).reduced()
+
+
+def list_configs():
+    return list(ARCHS)

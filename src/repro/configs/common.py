@@ -1,0 +1,71 @@
+"""Config system: ArchConfig + the assigned shape cells + registry helpers.
+
+Every assigned architecture ships as ``src/repro/configs/<id>.py`` exposing
+``config()`` (the exact published hyperparameters) and ``reduced()`` (a tiny
+same-family config for CPU smoke tests). The full configs are exercised only
+through the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.lm import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                   # "train" | "prefill" | "decode"
+
+
+# The assigned LM shape set (brief): train/prefill lower ``train_step``/
+# ``prefill``; decode_* and long_* lower ``serve_step`` (one token + KV cache).
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def enable_kv_quant(arch: "ArchConfig") -> "ArchConfig":
+    """Rebuild an ArchConfig with int8 KV caches on every GQA attention
+    block (serving-memory feature; used by the dry-run where the bf16 cache
+    exceeds HBM — see EXPERIMENTS.md §Dry-run)."""
+
+    def fix_block(b):
+        if b.attn is not None and b.attn.kv_lora_rank is None:
+            return dataclasses.replace(
+                b, attn=dataclasses.replace(b.attn, kv_quant=True)
+            )
+        return b
+
+    m = arch.model
+    model = dataclasses.replace(
+        m,
+        unit=tuple(fix_block(b) for b in m.unit),
+        prologue=tuple(fix_block(b) for b in m.prologue),
+        epilogue=tuple(fix_block(b) for b in m.epilogue),
+        shared=tuple(fix_block(b) for b in m.shared),
+    )
+    return dataclasses.replace(arch, model=model)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    model: ModelConfig
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    sub_quadratic: bool = False # eligible for long_500k (DESIGN.md §5)
+    source: str = ""
+    notes: str = ""
+
+    def cells(self) -> list[str]:
+        out = []
+        for name, cell in SHAPES.items():
+            if name == "long_500k" and not self.sub_quadratic:
+                continue  # documented skip: pure full-attention archs
+            out.append(name)
+        return out

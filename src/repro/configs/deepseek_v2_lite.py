@@ -1,0 +1,49 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=102400, MoE 64e top-6 — MLA kv_lora=512, 2 shared + routed top-6.
+[arXiv:2405.04434; hf]
+
+The pool line's "160 routed" conflicts with its own "64e top-6"; we follow
+the published DeepSeek-V2-Lite config: 64 routed experts, top-6, 2 shared
+experts, first layer dense (d_ff 10944), MLA with kv_lora_rank=512,
+qk_rope_head_dim=64, head_dim 128 (see DESIGN.md §5)."""
+
+from repro.configs.common import ArchConfig
+from repro.models.attention import AttnConfig
+from repro.models.blocks import BlockCfg
+from repro.models.lm import ModelConfig
+from repro.models.moe import MoEConfig
+
+
+def build(n_layers=27, d_model=2048, n_heads=16, d_ff_expert=1408,
+          vocab=102400, n_experts=64, top_k=6, n_shared=2, kv_lora=512,
+          dense_ff=10944, head_dim=128, qk_rope=64) -> ArchConfig:
+    attn = AttnConfig(
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_heads,
+        head_dim=head_dim, kv_lora_rank=kv_lora, qk_rope_dim=qk_rope,
+    )
+    moe = MoEConfig(
+        d_model=d_model, d_ff=d_ff_expert, n_experts=n_experts, top_k=top_k,
+        n_shared=n_shared,
+    )
+    model = ModelConfig(
+        name="deepseek-v2-lite", d_model=d_model, vocab=vocab,
+        prologue=(BlockCfg("attn_mlp", attn=attn, d_ff=dense_ff),),
+        unit=(BlockCfg("attn_moe", attn=attn, moe=moe),),
+        n_repeats=n_layers - 1,
+    )
+    return ArchConfig(
+        model=model, family="moe", sub_quadratic=False,
+        source="arXiv:2405.04434",
+        notes="MLA latent KV cache: serve caches only (kv_lora+rope)=576 "
+              "dims/token instead of 2*16*128=4096 (7.1x cache cut).",
+    )
+
+
+def config() -> ArchConfig:
+    return build()
+
+
+def reduced() -> ArchConfig:
+    return build(n_layers=3, d_model=64, n_heads=4, d_ff_expert=32,
+                 vocab=512, n_experts=8, top_k=2, n_shared=1, kv_lora=16,
+                 dense_ff=128, head_dim=16, qk_rope=8)

@@ -1,0 +1,41 @@
+"""kanformer-100m — the paper's technique as a first-class LM feature.
+
+A ~100M decoder LM whose FFN sublayers are B-spline KAN layers (G=5, P=3,
+the paper's Fig-7 setting). This is the end-to-end training/serving target
+for the KAN-SAs datapath (fused kernel / int8 LUT path) and one extra
+dry-run cell beyond the 10 assigned architectures."""
+
+from repro.configs.common import ArchConfig
+from repro.core.bspline import SplineGrid
+from repro.models.attention import AttnConfig
+from repro.models.blocks import BlockCfg
+from repro.models.lm import ModelConfig
+
+
+def build(n_layers=8, d_model=512, n_heads=8, n_kv=8, kan_ff=1024,
+          vocab=32000, G=5, P=3) -> ArchConfig:
+    attn = AttnConfig(
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+    )
+    grid = SplineGrid(-1.0, 1.0, G, P)
+    model = ModelConfig(
+        name="kanformer-100m", d_model=d_model, vocab=vocab,
+        unit=(BlockCfg("attn_kan", attn=attn, kan_grid=grid, kan_ff=kan_ff),),
+        n_repeats=n_layers,
+    )
+    return ArchConfig(
+        model=model, family="kan", sub_quadratic=False,
+        source="this work (paper technique integration)",
+        notes="KAN-FFN: (G+P)x coefficient axis on both FFN GEMMs; the "
+              "fused kernel keeps B out of HBM (paper SecIII-A).",
+    )
+
+
+def config() -> ArchConfig:
+    return build()
+
+
+def reduced() -> ArchConfig:
+    return build(n_layers=2, d_model=64, n_heads=4, n_kv=4, kan_ff=96,
+                 vocab=512, G=5, P=3)

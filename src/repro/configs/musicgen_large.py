@@ -1,0 +1,38 @@
+"""musicgen-large [audio]: 48L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+Backbone-only per the brief: the EnCodec frontend is a STUB —
+``input_specs()`` provides precomputed frame embeddings (B, S, d); the
+4-codebook delay-pattern head collapses to a single 2048-way head."""
+
+from repro.configs.common import ArchConfig
+from repro.models.attention import AttnConfig
+from repro.models.blocks import BlockCfg
+from repro.models.lm import ModelConfig
+
+
+def build(n_layers=48, d_model=2048, n_heads=32, n_kv=32, d_ff=8192,
+          vocab=2048) -> ArchConfig:
+    attn = AttnConfig(
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+    )
+    model = ModelConfig(
+        name="musicgen-large", d_model=d_model, vocab=vocab,
+        unit=(BlockCfg("attn_mlp", attn=attn, d_ff=d_ff),),
+        n_repeats=n_layers, input_kind="embeddings",
+    )
+    return ArchConfig(
+        model=model, family="audio", sub_quadratic=False,
+        source="arXiv:2306.05284",
+        notes="EnCodec frontend stubbed (precomputed frame embeddings); "
+              "sinusoidal positions replaced by rotary (DESIGN.md §5).",
+    )
+
+
+def config() -> ArchConfig:
+    return build()
+
+
+def reduced() -> ArchConfig:
+    return build(n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128, vocab=128)

@@ -1,0 +1,37 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+
+48 blocks at a 7:1 mLSTM:sLSTM ratio (xLSTM[7:1]); d_ff=0 means no separate
+FFN sublayer — blocks carry their own pf=2 up/down projections."""
+
+from repro.configs.common import ArchConfig
+from repro.models.blocks import BlockCfg
+from repro.models.lm import ModelConfig
+from repro.models.xlstm import XLSTMConfig
+
+
+def build(n_repeats=6, mlstm_per_unit=7, d_model=2048, n_heads=4,
+          vocab=50304) -> ArchConfig:
+    xc = XLSTMConfig(d_model=d_model, n_heads=n_heads)
+    unit = tuple(
+        [BlockCfg("mlstm", xlstm=xc)] * mlstm_per_unit
+        + [BlockCfg("slstm", xlstm=xc)]
+    )
+    model = ModelConfig(
+        name="xlstm-1.3b", d_model=d_model, vocab=vocab,
+        unit=unit, n_repeats=n_repeats,
+    )
+    return ArchConfig(
+        model=model, family="ssm", sub_quadratic=True,
+        source="arXiv:2405.04517 (unverified tier)",
+        notes="O(1) decode state; recurrent scan is the paper-faithful "
+              "baseline — the chunked-parallel mLSTM is a §Perf item.",
+    )
+
+
+def config() -> ArchConfig:
+    return build()
+
+
+def reduced() -> ArchConfig:
+    return build(n_repeats=1, mlstm_per_unit=2, d_model=64, n_heads=2, vocab=512)

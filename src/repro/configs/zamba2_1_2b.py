@@ -1,0 +1,48 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64 — Mamba2 + shared attn blocks. [arXiv:2411.15242; hf]
+
+Layer layout (38 total): 6 x [5 mamba2 + shared-attention] + 2 mamba2.
+The shared attention block is ONE parameter set invoked at 6 depths
+(Zamba2's shared-block scheme, simplified: no per-invocation LoRA —
+noted in DESIGN.md §5)."""
+
+from repro.configs.common import ArchConfig
+from repro.models.attention import AttnConfig
+from repro.models.blocks import BlockCfg
+from repro.models.lm import ModelConfig
+from repro.models.ssm import Mamba2Config
+
+
+def build(n_repeats=6, mamba_per_unit=5, tail=2, d_model=2048, n_heads=32,
+          n_kv=32, d_ff=8192, vocab=32000, d_state=64) -> ArchConfig:
+    attn = AttnConfig(
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+    )
+    mamba = Mamba2Config(d_model=d_model, d_state=d_state)
+    shared_attn = BlockCfg("attn_mlp", attn=attn, d_ff=d_ff)
+    unit = tuple(
+        [BlockCfg("mamba2", mamba=mamba)] * mamba_per_unit
+        + [BlockCfg("attn_mlp", attn=attn, d_ff=d_ff, shared_id=0)]
+    )
+    model = ModelConfig(
+        name="zamba2-1.2b", d_model=d_model, vocab=vocab,
+        unit=unit, n_repeats=n_repeats,
+        epilogue=tuple([BlockCfg("mamba2", mamba=mamba)] * tail),
+        shared=(shared_attn,),
+    )
+    return ArchConfig(
+        model=model, family="hybrid", sub_quadratic=True,
+        source="arXiv:2411.15242",
+        notes="long_500k: SSM state is O(1); the shared-attn KV cache "
+              "seq-shards across the data axis.",
+    )
+
+
+def config() -> ArchConfig:
+    return build()
+
+
+def reduced() -> ArchConfig:
+    return build(n_repeats=1, mamba_per_unit=2, tail=1, d_model=64,
+                 n_heads=4, n_kv=4, d_ff=128, vocab=512, d_state=16)

@@ -1,0 +1,10 @@
+"""KAN-SAs core: the paper's contribution as composable JAX modules.
+
+* :mod:`repro.core.bspline`      -- exact + tabulated B-spline evaluation
+* :mod:`repro.core.kan_layer`    -- KAN layers as GEMM workloads (all paths)
+* :mod:`repro.core.quantization` -- integer-only inference (paper SecV)
+* :mod:`repro.core.sa_model`     -- calibrated analytical SA model (Tab I/Figs 7-8)
+* :mod:`repro.core.grid`         -- grid refinement + least-squares refit
+"""
+
+from repro.core.bspline import SplineGrid  # noqa: F401

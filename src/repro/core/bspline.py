@@ -1,0 +1,258 @@
+"""B-spline math for KAN layers (paper §II-A, §III-B).
+
+Implements, in pure JAX:
+
+* the exact (differentiable) Cox-de Boor evaluation (paper Eq. 2-3) — the
+  software oracle and the training path;
+* the *cardinal* B-spline reduction on uniform grids (paper Eq. 4):
+  ``B_{t_k,P}(x) = B_{0,P}((x - t0)/delta - k)``;
+* the compact N:M form exploiting local support (paper §IV-A): for any input
+  only ``N = P+1`` contiguous basis functions out of ``M = G+P`` are non-zero;
+* the tabulation strategy (paper §III-B, Fig. 4-5): half-table storage using
+  the symmetry ``B_{0,P}(t) = B_{0,P}(P+1-t)`` and the inverted-address fetch.
+
+Conventions
+-----------
+A uniform grid with ``G`` intervals over ``[x_min, x_max]`` and degree ``P``
+is extended by ``P`` intervals on each side (paper Fig. 2):
+
+* knots ``t_i = x_min + (i - P) * delta`` for ``i = 0 .. G+2P``
+  (``G+2P+1`` knots, ``delta = (x_max-x_min)/G``);
+* ``N_b = G+P`` basis functions ``B_0 .. B_{G+P-1}``; ``B_m`` is supported on
+  ``[t_m, t_{m+P+1})``;
+* an in-domain input lies in interval ``k`` with ``t_k <= x < t_{k+1}``,
+  ``k in [P, G+P-1]``, and its non-zero functions are ``B_{k-P} .. B_k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SplineGrid",
+    "cox_de_boor_dense",
+    "cardinal_bspline",
+    "align",
+    "interval_index",
+    "compact_basis",
+    "compact_to_dense",
+    "build_lut",
+    "lut_basis_compact",
+    "lut_basis_dense",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SplineGrid:
+    """A uniform, extended B-spline grid (paper Fig. 2)."""
+
+    x_min: float = -1.0
+    x_max: float = 1.0
+    G: int = 5
+    P: int = 3
+
+    def __post_init__(self):
+        if self.G < 1 or self.P < 1:
+            raise ValueError(f"G >= 1 and P >= 1 required, got G={self.G} P={self.P}")
+        if not self.x_max > self.x_min:
+            raise ValueError("x_max must exceed x_min")
+
+    @property
+    def delta(self) -> float:
+        return (self.x_max - self.x_min) / self.G
+
+    @property
+    def n_basis(self) -> int:
+        """M = G+P basis functions (paper §II-A)."""
+        return self.G + self.P
+
+    @property
+    def n_nonzero(self) -> int:
+        """N = P+1 non-zero basis values per input (paper §IV-A)."""
+        return self.P + 1
+
+    @property
+    def t0(self) -> float:
+        """First extended knot, t_0 = x_min - P*delta."""
+        return self.x_min - self.P * self.delta
+
+    @property
+    def t_last(self) -> float:
+        """Last extended knot, t_{G+2P}."""
+        return self.x_min + (self.G + self.P) * self.delta
+
+    def knots(self) -> np.ndarray:
+        """All G+2P+1 extended knots."""
+        return self.t0 + self.delta * np.arange(self.G + 2 * self.P + 1)
+
+    def half_cols(self) -> int:
+        """Columns of the half-table: ceil((P+1)/2) unit intervals cover half
+        the cardinal support [0, P+1] (paper §III-B: 'we only need to store
+        half the B-spline')."""
+        return math.ceil((self.P + 1) / 2)
+
+
+# ---------------------------------------------------------------------------
+# Exact evaluation (Cox-de Boor, paper Eq. 2-3) — differentiable oracle.
+# ---------------------------------------------------------------------------
+
+
+def cox_de_boor_dense(x: jax.Array, grid: SplineGrid) -> jax.Array:
+    """All ``G+P`` basis values at ``x``: output shape ``x.shape + (G+P,)``.
+
+    Iterative (bottom-up) Cox-de Boor; differentiable in ``x`` a.e. and exact
+    for any degree. This is the paper's "conventional" software evaluation and
+    the oracle for the tabulated paths.
+    """
+    knots = jnp.asarray(grid.knots(), dtype=x.dtype)
+    xx = x[..., None]
+    # Degree 0: indicator of each of the G+2P intervals.
+    b = jnp.where((xx >= knots[:-1]) & (xx < knots[1:]), 1.0, 0.0).astype(x.dtype)
+    for p in range(1, grid.P + 1):
+        t_i = knots[: -(p + 1)]          # t_i
+        t_ip = knots[p:-1]               # t_{i+p}
+        t_i1 = knots[1:-p]               # t_{i+1}
+        t_ip1 = knots[p + 1:]            # t_{i+p+1}
+        left = (xx - t_i) / (t_ip - t_i) * b[..., :-1]
+        right = (t_ip1 - xx) / (t_ip1 - t_i1) * b[..., 1:]
+        b = left + right
+    return b[..., : grid.n_basis]
+
+
+@functools.partial(jax.jit, static_argnames=("P",))
+def cardinal_bspline(u: jax.Array, P: int) -> jax.Array:
+    """Cardinal B-spline ``B_{0,P}(u)`` on integer knots ``0..P+1``.
+
+    Support is ``[0, P+1)``; symmetric about ``(P+1)/2`` (paper §III-B).
+    """
+    u = jnp.asarray(u)
+    uu = u[..., None]
+    i = jnp.arange(P + 2, dtype=u.dtype)
+    b = jnp.where((uu >= i[:-1]) & (uu < i[1:]), 1.0, 0.0).astype(u.dtype)
+    for p in range(1, P + 1):
+        # Integer knots: t_{i+p} - t_i = p, t_{i+p+1} - t_{i+1} = p.
+        idx = jnp.arange(P + 1 - p, dtype=u.dtype)
+        left = (uu - idx) / p * b[..., :-1]
+        right = (idx + p + 1 - uu) / p * b[..., 1:]
+        b = left + right
+    return b[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Alignment + compact N:M form (paper Eq. 4, §IV-A).
+# ---------------------------------------------------------------------------
+
+
+def align(x: jax.Array, grid: SplineGrid) -> jax.Array:
+    """Aligned coordinate ``z = (x - t0)/delta`` (paper Eq. 4, the Align unit)."""
+    return (x - grid.t0) / jnp.asarray(grid.delta, dtype=x.dtype)
+
+
+def interval_index(x: jax.Array, grid: SplineGrid) -> jax.Array:
+    """Interval index ``k`` with ``t_k <= x < t_{k+1}`` (the Compare unit).
+
+    Clipped to the valid in-domain range ``[P, G+P-1]``; out-of-domain inputs
+    saturate to the boundary interval (the paper's address clip, Eq. 5).
+    """
+    z = align(x, grid)
+    k = jnp.floor(z).astype(jnp.int32)
+    return jnp.clip(k, grid.P, grid.n_basis - 1)
+
+
+def compact_basis(x: jax.Array, grid: SplineGrid) -> tuple[jax.Array, jax.Array]:
+    """Exact compact N:M evaluation.
+
+    Returns ``(vals, k)`` where ``vals.shape = x.shape + (P+1,)`` holds the
+    values of the non-zero functions ``B_{k-P} .. B_k`` (ascending index) and
+    ``k`` is the interval index. ``vals[..., i] = B_{0,P}(x_a + P - i)`` with
+    ``x_a = z - k`` the in-interval offset (paper Fig. 4).
+    """
+    z = align(x, grid)
+    k = interval_index(x, grid)
+    xa = z - k.astype(z.dtype)
+    offs = jnp.arange(grid.P, -1, -1, dtype=z.dtype)  # P, P-1, ..., 0
+    vals = cardinal_bspline(xa[..., None] + offs, grid.P)
+    return vals, k
+
+
+def compact_to_dense(vals: jax.Array, k: jax.Array, grid: SplineGrid) -> jax.Array:
+    """Scatter compact values into the dense ``(..., G+P)`` layout.
+
+    This is the TPU analogue of the paper's M-to-N multiplexer run in reverse:
+    a compare-against-iota one-hot select, which keeps everything vectorised.
+    """
+    m = jnp.arange(grid.n_basis, dtype=jnp.int32)
+    # dense[..., m] = vals[..., m - (k-P)] where 0 <= m-(k-P) <= P.
+    rel = m - (k[..., None] - grid.P)
+    inside = (rel >= 0) & (rel <= grid.P)
+    gathered = jnp.take_along_axis(
+        vals, jnp.clip(rel, 0, grid.P), axis=-1, mode="clip"
+    )
+    return jnp.where(inside, gathered, 0.0).astype(vals.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tabulation (paper §III-B, Fig. 4-5).
+# ---------------------------------------------------------------------------
+
+
+def build_lut(P: int, S: int = 256, dtype=np.float32) -> np.ndarray:
+    """Build the half-table of the cardinal B-spline.
+
+    ``T[a, c] = B_{0,P}(a/(S-1) + c)`` for ``a in [0, S)`` and
+    ``c in [0, ceil((P+1)/2))``. Together with the inverted-address fetch this
+    covers the full support ``[0, P+1]`` (paper Fig. 4: only ``[0, (P+1)/2]``
+    is stored; Fig. 5: two values per row for P=3).
+    """
+    cols = math.ceil((P + 1) / 2)
+    a = np.arange(S, dtype=np.float64) / (S - 1)
+    u = a[:, None] + np.arange(cols)[None, :]
+    tab = np.asarray(cardinal_bspline(jnp.asarray(u), P))
+    return tab.astype(dtype)
+
+
+def lut_basis_compact(
+    x: jax.Array, grid: SplineGrid, lut: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Tabulated compact evaluation (paper Fig. 5).
+
+    For in-interval offset ``x_a`` quantised to address ``addr`` in
+    ``[0, S-1]``, the needed values are ``B0(x_a + j)`` for ``j = 0..P``:
+
+    * ``j <  ceil((P+1)/2)``: direct fetch ``T[addr, j]``;
+    * ``j >= ceil((P+1)/2)``: symmetry ``B0(x_a+j) = B0((1-x_a) + (P-j))`` —
+      fetch ``T[S-1-addr, P-j]`` (the paper's ``~`` inversion unit, with the
+      values "reverse-packed").
+
+    Output ``vals[..., i]`` is ordered by ascending basis index (``j = P-i``),
+    matching :func:`compact_basis`.
+    """
+    S = lut.shape[0]
+    half = lut.shape[1]
+    P = grid.P
+    z = align(x, grid)
+    k = interval_index(x, grid)
+    xa = jnp.clip(z - k.astype(z.dtype), 0.0, 1.0)
+    addr = jnp.clip(jnp.round(xa * (S - 1)).astype(jnp.int32), 0, S - 1)
+    addr_inv = (S - 1) - addr
+    cols = []
+    for i in range(P + 1):  # ascending basis index m = k-P+i
+        j = P - i
+        if j < half:
+            cols.append(lut[addr, j])
+        else:
+            cols.append(lut[addr_inv, P - j])
+    vals = jnp.stack(cols, axis=-1)
+    return vals, k
+
+
+def lut_basis_dense(x: jax.Array, grid: SplineGrid, lut: jax.Array) -> jax.Array:
+    """Tabulated evaluation scattered to the dense ``(..., G+P)`` layout."""
+    vals, k = lut_basis_compact(x, grid, lut)
+    return compact_to_dense(vals, k, grid)

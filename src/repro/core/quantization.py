@@ -1,0 +1,214 @@
+"""Integer-only KAN inference (paper §V, ref [18] Jacob et al.).
+
+The paper's accelerator is int8-in / int32-accumulate: activations are
+affine-quantised over the *extended grid domain* (so the Align/Compare units
+can run the Eq. 5 integer address arithmetic), LUT values are uint8 with a
+power-of-two dequantisation scale (Fig. 5 stores ``B·192``; we default to the
+largest power of two that fits, e.g. ``B·256`` for cubic where
+``max B_{0,3} = 2/3``), and spline coefficients are symmetric int8.
+
+Validated claim (paper §V): "<1% accuracy drop for all the models
+(e.g., MNIST-KAN drops from 96.58% to 96.0%)" — see
+``benchmarks/quant_accuracy.py`` and ``examples/mnist_kan.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bspline
+from repro.core.bspline import SplineGrid
+
+
+# ---------------------------------------------------------------------------
+# Basic affine / symmetric quantisation helpers.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineQuant:
+    """q = clip(round(x/scale) + zero, 0, 2^bits - 1)."""
+
+    scale: float
+    zero: int
+    bits: int = 8
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.bits) - 1
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        q = jnp.round(x / self.scale) + self.zero
+        return jnp.clip(q, 0, self.qmax).astype(jnp.int32)
+
+    def dequantize(self, q: jax.Array) -> jax.Array:
+        return (q.astype(jnp.float32) - self.zero) * self.scale
+
+
+def affine_from_range(lo: float, hi: float, bits: int = 8) -> AffineQuant:
+    scale = (hi - lo) / ((1 << bits) - 1)
+    zero = int(round(-lo / scale))
+    return AffineQuant(scale=scale, zero=zero, bits=bits)
+
+
+def symmetric_scales(w: jax.Array, axis=None, bits: int = 8) -> jax.Array:
+    """Per-axis symmetric int8 scales: q = round(w/s), s = max|w|/127."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-12) / ((1 << (bits - 1)) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Quantised LUT (paper Fig. 5) and integer address arithmetic (paper Eq. 5).
+# ---------------------------------------------------------------------------
+
+
+def lut_value_scale(P: int) -> int:
+    """Largest power-of-two s with max(B_{0,P}) * s <= 255 (uint8 values).
+
+    For P=3: max = 2/3 -> s = 256 (the paper uses 192 = 3·2^6, which also
+    preserves partition-of-unity in integers; both are supported — 256 keeps
+    the dequant a pure shift)."""
+    mx = float(bspline.cardinal_bspline(jnp.asarray((P + 1) / 2.0), P))
+    return 1 << int(math.floor(math.log2(255.0 / mx)))
+
+
+def build_lut_u8(P: int, S: int = 256, scale: int | None = None) -> np.ndarray:
+    """uint8 half-table: round(B_{0,P} · scale) (paper Fig. 5 stores 8-bit
+    values, two per row for P=3; generic: ceil((P+1)/2) per row)."""
+    if scale is None:
+        scale = lut_value_scale(P)
+    tab = bspline.build_lut(P, S, dtype=np.float64) * scale
+    return np.clip(np.round(tab), 0, 255).astype(np.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedGrid:
+    """Integer-domain grid: activation quantisation aligned to the extended
+    knot span so Eq. 5 address math is exact in int32."""
+
+    grid: SplineGrid
+    x_quant: AffineQuant
+    lut_scale: int
+    S: int = 256
+
+    @staticmethod
+    def make(grid: SplineGrid, S: int = 256, bits: int = 8) -> "QuantizedGrid":
+        # Activations quantised over the *extended* domain [t0, t_last]
+        # (paper §III-B2: x_q and t_q share one affine scheme).
+        xq = affine_from_range(grid.t0, grid.t_last, bits)
+        return QuantizedGrid(grid, xq, lut_value_scale(grid.P), S)
+
+
+def int_address(qg: QuantizedGrid, x_q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Integer Align+Compare (paper Eq. 5).
+
+    ``u = (G+2P)·(x_q - t_q0)`` spans ``[0, (G+2P)·qmax]``; the interval index
+    is ``k = u // qmax`` (Compare unit's interval search) and the LUT address
+    is ``clip(u - qmax·k, 0, qmax)`` — exactly Eq. 5 with qmax = 255.
+    """
+    g = qg.grid
+    qmax = qg.x_quant.qmax
+    t_q0 = 0  # t0 quantises to the range minimum by construction
+    u = (g.G + 2 * g.P) * (x_q - t_q0)                      # int32
+    k = jnp.clip(u // qmax, g.P, g.n_basis - 1)
+    addr = jnp.clip(u - qmax * k, 0, qmax)
+    # Rescale the qmax-wide in-interval offset onto the S-entry table.
+    addr = (addr * (qg.S - 1)) // qmax
+    return addr.astype(jnp.int32), k.astype(jnp.int32)
+
+
+def lut_fetch_u8(
+    qg: QuantizedGrid, lut_u8: jax.Array, addr: jax.Array
+) -> jax.Array:
+    """Fetch the P+1 non-zero uint8 B-spline values (ascending basis index)
+    using the direct + inverted-address scheme (paper Fig. 5's ``~`` unit)."""
+    P = qg.grid.P
+    half = lut_u8.shape[1]
+    addr_inv = (qg.S - 1) - addr
+    cols = []
+    for i in range(P + 1):
+        j = P - i
+        if j < half:
+            cols.append(lut_u8[addr, j])
+        else:
+            cols.append(lut_u8[addr_inv, P - j])
+    return jnp.stack(cols, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fully-quantised KAN layer forward (int8 x, uint8 LUT, int8 coeff, int32 acc).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedKANLayer:
+    coeff_q: jax.Array      # (K, M, N) int8 as int32
+    coeff_scale: jax.Array  # (1, 1, N) per-output-channel
+    base_w_q: jax.Array | None
+    base_w_scale: jax.Array | None
+    qg: QuantizedGrid
+    lut_u8: jax.Array
+
+
+def quantize_kan_layer(params, grid: SplineGrid, S: int = 256) -> QuantizedKANLayer:
+    qg = QuantizedGrid.make(grid, S)
+    coeff = params["coeff"]
+    cs = symmetric_scales(coeff, axis=(0, 1))
+    coeff_q = jnp.clip(jnp.round(coeff / cs), -127, 127).astype(jnp.int32)
+    base_w = params.get("base_w")
+    if base_w is not None:
+        bs_ = symmetric_scales(base_w, axis=0)
+        base_q = jnp.clip(jnp.round(base_w / bs_), -127, 127).astype(jnp.int32)
+    else:
+        bs_, base_q = None, None
+    return QuantizedKANLayer(
+        coeff_q=coeff_q,
+        coeff_scale=cs,
+        base_w_q=base_q,
+        base_w_scale=bs_,
+        qg=qg,
+        lut_u8=jnp.asarray(build_lut_u8(grid.P, S)),
+    )
+
+
+def quantized_kan_forward(qlayer: QuantizedKANLayer, x: jax.Array) -> jax.Array:
+    """End-to-end integer KAN layer (paper §V 'integer-only implementation').
+
+    Returns float32 output (the accumulator is int32; the final rescale is
+    the only float op, as in [18])."""
+    qg = qlayer.qg
+    g = qg.grid
+    P = g.P
+    x_q = qg.x_quant.quantize(x)                       # (..., K) int32
+    addr, k = int_address(qg, x_q)
+    bvals = lut_fetch_u8(qg, qlayer.lut_u8, addr)      # (..., K, P+1) int32
+    # Gather int8 coefficient slabs (the M-to-N multiplexer) and accumulate
+    # in int32: psum += sum_i c_{k-P+i} · B_i  (paper §IV-A).
+    K, M, N = qlayer.coeff_q.shape
+    m_idx = k[..., None] - P + jnp.arange(P + 1, dtype=k.dtype)
+    flat_m = m_idx.reshape(-1, K, P + 1)
+    coeff_b = jnp.broadcast_to(qlayer.coeff_q, flat_m.shape[:1] + qlayer.coeff_q.shape)
+    slabs = jnp.take_along_axis(coeff_b, flat_m[..., None], axis=2, mode="clip")
+    acc = jnp.einsum(
+        "bki,bkin->bn",
+        bvals.reshape(-1, K, P + 1),
+        slabs,
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32).reshape(x.shape[:-1] + (N,))
+    y = y * (qlayer.coeff_scale.reshape(1, -1) / qg.lut_scale)
+    if qlayer.base_w_q is not None:
+        # ReLU in the integer domain: max(x_q, zero_point) (paper Eq. 1 base
+        # term with ReLU instead of SiLU).
+        relu_q = jnp.maximum(x_q, qg.x_quant.zero) - qg.x_quant.zero
+        yb = jnp.einsum(
+            "...k,kn->...n", relu_q, qlayer.base_w_q,
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+        y = y + yb * (qlayer.base_w_scale.reshape(1, -1) * qg.x_quant.scale)
+    return y

@@ -1,0 +1,74 @@
+"""Data pipelines: deterministic synthetic LM tokens, regression sets, and
+an MNIST-like classification set (offline container: no downloads — the
+MNIST-like set is class-conditional structured noise; accuracy numbers on it
+are labelled as synthetic in EXPERIMENTS.md).
+
+Determinism & fault tolerance: every batch is a pure function of
+``(seed, step)``, so a restart at step N reproduces the exact stream without
+replaying — the checkpoint only needs to store the step counter
+(DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+def lm_batch(cfg: LMDataConfig, step: int) -> dict:
+    """Markov-chain synthetic tokens (learnable structure, not iid noise)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2 = jax.random.split(key)
+    B, T, V = cfg.global_batch, cfg.seq_len, cfg.vocab
+    # block-structured transitions: next ~ (prev * a + noise) mod V
+    start = jax.random.randint(k1, (B, 1), 0, V)
+    steps = jax.random.randint(k2, (B, T), 0, 7)
+    toks = (start + jnp.cumsum(steps, axis=1)) % V
+    tokens = toks.astype(jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((B, 1), -100, jnp.int32)], axis=1
+    )
+    return {"tokens": tokens, "labels": labels}
+
+
+def mnist_like(
+    n: int, seed: int = 0, n_classes: int = 10, dim: int = 784,
+    noise: float = 0.7, proto_seed: int = 1234,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Class-conditional structured patterns in [-1, 1]^784 (SYNTHETIC MNIST
+    stand-in: offline container). Prototypes are smooth random fields; inputs
+    are prototype + noise, so the task needs a real decision boundary.
+
+    ``proto_seed`` fixes the class prototypes INDEPENDENTLY of the sampling
+    seed, so train/test splits drawn with different seeds share one task."""
+    rs_p = np.random.RandomState(proto_seed)
+    side = int(np.sqrt(dim))
+    protos = []
+    for c in range(n_classes):
+        f = rs_p.normal(size=(side // 4 + 1, side // 4 + 1))
+        up = np.kron(f, np.ones((4, 4)))[:side, :side]
+        protos.append(up / (np.abs(up).max() + 1e-9))
+    protos = np.stack(protos).reshape(n_classes, -1)
+    rs = np.random.RandomState(seed)
+    y = rs.randint(0, n_classes, n)
+    x = protos[y] + noise * rs.normal(size=(n, dim))
+    x = np.tanh(x).astype(np.float32)
+    return x, y.astype(np.int32)
+
+
+def regression_set(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """The KAN paper's flavour of symbolic targets: f(x,y)=exp(sin(pi x)+y^2)."""
+    rs = np.random.RandomState(seed)
+    X = rs.uniform(-1, 1, (n, 2)).astype(np.float32)
+    Y = np.exp(np.sin(np.pi * X[:, :1]) + X[:, 1:] ** 2).astype(np.float32)
+    return X, Y

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: the tabulated B-spline unit (paper §III-B, Fig. 5).
+
+Computes, for a block of inputs, the ``P+1`` non-zero B-spline values and the
+interval index ``k`` from a half-table of the cardinal B-spline — the
+on-the-fly "BSpline block" that feeds the systolic array in the paper.
+
+TPU adaptation: the ROM lookup becomes a **one-hot matmul** against the
+(S x half) table resident in VMEM. A one-hot (block, S) @ (S, half) contraction
+is MXU-native, branch-free, and implements *both* the direct and the
+inverted-address fetch (the paper's ``~`` unit) as two small matmuls. The
+alignment (Eq. 4) and interval search run as VPU vector code.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bspline import SplineGrid
+
+
+def _bspline_lut_kernel(
+    x_ref, lut_ref, vals_ref, k_ref, *, grid: SplineGrid, S: int, half: int
+):
+    P = grid.P
+    x = x_ref[...]                                     # (block,)
+    dtype = x.dtype
+    # Align unit (Eq. 4): z = (x - t0)/delta.
+    z = (x - dtype.type(grid.t0)) / dtype.type(grid.delta)
+    # Compare unit: interval search, clipped to the in-domain range.
+    k = jnp.clip(jnp.floor(z).astype(jnp.int32), P, grid.n_basis - 1)
+    xa = jnp.clip(z - k.astype(dtype), 0.0, 1.0)
+    addr = jnp.clip(jnp.round(xa * (S - 1)).astype(jnp.int32), 0, S - 1)
+    addr_inv = (S - 1) - addr
+
+    # ROM fetch as one-hot MXU matmuls (direct + inverted address).
+    iota = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], S), 1)
+    onehot_d = (addr[:, None] == iota).astype(dtype)
+    onehot_i = (addr_inv[:, None] == iota).astype(dtype)
+    lut = lut_ref[...]                                 # (S, half)
+    direct = jnp.dot(onehot_d, lut, preferred_element_type=jnp.float32)
+    mirror = jnp.dot(onehot_i, lut, preferred_element_type=jnp.float32)
+
+    # Assemble the P+1 values in ascending basis order (Fig. 5:
+    # "the corresponding values are reverse-packed").
+    cols = []
+    for i in range(P + 1):
+        j = P - i
+        cols.append(direct[:, j] if j < half else mirror[:, P - j])
+    vals_ref[...] = jnp.stack(cols, axis=-1).astype(dtype)
+    k_ref[...] = k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid", "block", "interpret")
+)
+def bspline_lut_pallas(
+    x: jax.Array,
+    lut: jax.Array,
+    grid: SplineGrid,
+    block: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Tabulated evaluation of a flat vector of inputs.
+
+    Returns ``(vals, k)`` with ``vals: (n, P+1)``, ``k: (n,) int32``.
+    """
+    (n,) = x.shape
+    S, half = lut.shape
+    n_pad = -n % block
+    xp = jnp.pad(x, (0, n_pad), constant_values=grid.x_min)
+    kernel = functools.partial(
+        _bspline_lut_kernel, grid=grid, S=S, half=half
+    )
+    vals, k = pl.pallas_call(
+        kernel,
+        grid=(xp.shape[0] // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((S, half), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, grid.P + 1), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], grid.P + 1), x.dtype),
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, lut)
+    return vals[:n], k[:n]

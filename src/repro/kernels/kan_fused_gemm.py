@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: fused KAN GEMM — the KAN-SAs array itself (paper §III-IV).
+
+Computes ``Y[b, n] = sum_{j,m} B_m(x[b, j]) * C[j, m, n]`` **without ever
+materialising the B-spline activation matrix ``B : (BS, K*(G+P))`` in HBM**.
+
+This is the TPU rendering of the paper's two architectural moves:
+
+* the B-spline unit "directly streams its values into the systolic array"
+  (§III-A): here, each grid step evaluates the compact ``P+1`` non-zero
+  values *in VMEM/registers* from the raw ``x`` tile;
+* the N:M vector PE with its M-to-N multiplexer (§IV-B): the multiplexer
+  becomes a branch-free compare-select that places the compact values into
+  the dense band of an MXU tile. Structured sparsity is thereby converted
+  into MXU-aligned compute, and the HBM traffic drops from
+  ``X + B + C + Y`` to ``X + C + Y`` — a ``(G+P)``-fold cut of the dominant
+  activation stream (see EXPERIMENTS.md §Perf for the roofline accounting).
+
+Grid: ``(BS/bb, N/bn, K/bk)`` with the contraction dim innermost; the output
+tile stays resident in VMEM across the ``K`` sweep (standard Pallas matmul
+revisiting pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bspline import SplineGrid
+
+
+def _compact_basis_inblock(x, grid: SplineGrid):
+    """Exact compact N:M evaluation as branch-free vector code.
+
+    Returns ``vals: x.shape + (P+1,)`` (ascending basis index) and ``k``.
+    Identical math to :func:`repro.core.bspline.compact_basis`, written with
+    only iota/where/arithmetic so it lowers cleanly inside a TPU kernel.
+    """
+    P = grid.P
+    dtype = x.dtype
+    z = (x - dtype.type(grid.t0)) / dtype.type(grid.delta)
+    k = jnp.clip(jnp.floor(z).astype(jnp.int32), P, grid.n_basis - 1)
+    xa = jnp.clip(z - k.astype(dtype), 0.0, 1.0)
+    # Evaluate the cardinal B-spline at u_i = xa + (P - i), i = 0..P.
+    # Since u_i in [P-i, P-i+1), the degree-0 coefficient vector for point i
+    # is e_{P-i}: run the Cox-de Boor triangle on a (P+2)-wide band.
+    offs = dtype.type(P) - jax.lax.broadcasted_iota(
+        jnp.int32, xa.shape + (P + 1,), xa.ndim
+    ).astype(dtype)
+    u = xa[..., None] + offs                                    # (..., P+1)
+    nseg = P + 2
+    seg = jax.lax.broadcasted_iota(jnp.int32, u.shape + (nseg - 1,), u.ndim)
+    b = jnp.where(
+        (u[..., None] >= seg.astype(dtype)) & (u[..., None] < (seg + 1).astype(dtype)),
+        dtype.type(1.0),
+        dtype.type(0.0),
+    )                                                           # (..., P+1, P+1)
+    for p in range(1, P + 1):
+        idx = jax.lax.broadcasted_iota(
+            jnp.int32, u.shape + (nseg - 1 - p,), u.ndim
+        ).astype(dtype)
+        left = (u[..., None] - idx) / dtype.type(p) * b[..., :-1]
+        right = (idx + dtype.type(p + 1) - u[..., None]) / dtype.type(p) * b[..., 1:]
+        b = left + right
+    return b[..., 0], k
+
+
+def _fused_kernel(x_ref, c_ref, y_ref, *, grid: SplineGrid, bk: int):
+    P, M = grid.P, grid.n_basis
+    x = x_ref[...]                                    # (bb, bk)
+    vals, k = _compact_basis_inblock(x, grid)         # (bb, bk, P+1), (bb, bk)
+
+    # M-to-N multiplexer, run in reverse (paper §IV-B): place the compact
+    # values into the dense band with compare-selects — no gathers.
+    m_iota = jax.lax.broadcasted_iota(jnp.int32, x.shape + (M,), x.ndim)
+    rel = m_iota - (k[..., None] - P)                 # (bb, bk, M)
+    band = jnp.zeros(x.shape + (M,), x.dtype)
+    for i in range(P + 1):
+        band = band + jnp.where(rel == i, vals[..., i][..., None], x.dtype.type(0.0))
+
+    bb = x.shape[0]
+    B_tile = band.reshape(bb, bk * M)                 # (bb, bk*M) in VMEM only
+    c = c_ref[...]                                    # (bk*M, bn)
+    acc = jnp.dot(B_tile, c, preferred_element_type=jnp.float32)
+
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        y_ref[...] = acc.astype(y_ref.dtype)
+
+    @pl.when(kk > 0)
+    def _acc():
+        y_ref[...] = (y_ref[...].astype(jnp.float32) + acc).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid", "bb", "bn", "bk", "interpret")
+)
+def kan_fused_gemm_pallas(
+    x: jax.Array,
+    coeff: jax.Array,
+    grid: SplineGrid,
+    bb: int = 128,
+    bn: int = 128,
+    bk: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused KAN GEMM. ``x: (BS, K)``, ``coeff: (K, M, N)`` -> ``(BS, N)``.
+
+    Block sizes default to MXU-friendly tiles (contraction width ``bk*M``);
+    inputs are padded to block multiples (padded features carry zero
+    coefficients, hence contribute nothing).
+    """
+    BS, K = x.shape
+    Kc, M, N = coeff.shape
+    assert Kc == K and M == grid.n_basis
+    pb, pk, pn = -BS % bb, -K % bk, -N % bn
+    xp = jnp.pad(x, ((0, pb), (0, pk)), constant_values=grid.x_min)
+    cp = jnp.pad(coeff, ((0, pk), (0, 0), (0, pn)))
+    c2 = cp.reshape((K + pk) * M, N + pn)
+    gb, gn, gk = (BS + pb) // bb, (N + pn) // bn, (K + pk) // bk
+
+    y = pl.pallas_call(
+        functools.partial(_fused_kernel, grid=grid, bk=bk),
+        grid=(gb, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk * M, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((BS + pb, N + pn), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xp, c2)
+    return y[:BS, :N]

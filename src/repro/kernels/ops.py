@@ -1,0 +1,67 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+real TPU backend they compile to Mosaic. The switch is automatic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bspline import SplineGrid
+from repro.kernels import bspline_lut as _lut
+from repro.kernels import kan_fused_gemm as _fused
+from repro.kernels import kan_int8_gemm as _int8
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bspline_lut(
+    x: jax.Array, lut: jax.Array, grid: SplineGrid, block: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Tabulated B-spline unit over a flat input vector -> (vals, k)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _lut.bspline_lut_pallas(x, lut, grid, block=block, interpret=interpret)
+
+
+def kan_fused_gemm(
+    x: jax.Array, coeff: jax.Array, grid: SplineGrid,
+    bb: int = 128, bn: int = 128, bk: int = 16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused on-the-fly-B KAN GEMM (spline term of Eq. 1).
+
+    Accepts ``x`` of shape ``(..., K)``; leading dims are flattened.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _fused.kan_fused_gemm_pallas(
+        x2, coeff, grid, bb=bb, bn=bn, bk=bk, interpret=interpret
+    )
+    return y.reshape(lead + (coeff.shape[-1],))
+
+
+def kan_int8_gemm(
+    x_q: jax.Array, lut_u8: jax.Array, coeff_q: jax.Array, grid: SplineGrid,
+    bb: int = 128, bn: int = 128, bk: int = 16, qmax: int = 255,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Integer-only fused KAN GEMM -> int32 accumulator."""
+    if interpret is None:
+        interpret = _interpret_default()
+    lead = x_q.shape[:-1]
+    x2 = x_q.reshape(-1, x_q.shape[-1])
+    y = _int8.kan_int8_gemm_pallas(
+        x2, lut_u8, coeff_q, grid, bb=bb, bn=bn, bk=bk, qmax=qmax,
+        interpret=interpret,
+    )
+    return y.reshape(lead + (coeff_q.shape[-1],))

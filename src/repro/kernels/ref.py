@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references in
+``tests/test_kernels_*.py`` across shape/dtype sweeps (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bspline
+from repro.core.bspline import SplineGrid
+
+
+def ref_bspline_compact(
+    x: jax.Array, grid: SplineGrid, lut: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the B-spline unit: compact (P+1) values + interval index.
+
+    With ``lut`` given, mirrors the tabulated datapath (paper Fig. 5);
+    otherwise exact Cox-de Boor.
+    """
+    if lut is None:
+        return bspline.compact_basis(x, grid)
+    return bspline.lut_basis_compact(x, grid, lut)
+
+
+def ref_kan_gemm(x: jax.Array, coeff: jax.Array, grid: SplineGrid) -> jax.Array:
+    """Oracle for the fused KAN GEMM: dense-B einsum (the spline term of
+    Eq. 1, no base term)."""
+    B = bspline.cox_de_boor_dense(x, grid)      # (BS, K, M)
+    return jnp.einsum("bkm,kmn->bn", B, coeff)
+
+
+def ref_kan_gemm_int8(
+    x_q: jax.Array,
+    coeff_q: jax.Array,
+    lut_u8: jax.Array,
+    grid: SplineGrid,
+    qmax: int = 255,
+) -> jax.Array:
+    """Oracle for the int8 fused GEMM: integer address math (paper Eq. 5),
+    uint8 LUT fetch, int8 coeffs, int32 accumulation. Returns int32."""
+    G, P = grid.G, grid.P
+    S = lut_u8.shape[0]
+    half = lut_u8.shape[1]
+    u = (G + 2 * P) * (x_q.astype(jnp.int32) - 0)
+    k = jnp.clip(u // qmax, P, grid.n_basis - 1)
+    addr = jnp.clip(u - qmax * k, 0, qmax)
+    addr = (addr * (S - 1)) // qmax
+    addr_inv = (S - 1) - addr
+    cols = []
+    for i in range(P + 1):
+        j = P - i
+        cols.append(lut_u8[addr, j] if j < half else lut_u8[addr_inv, P - j])
+    bvals = jnp.stack(cols, axis=-1).astype(jnp.int32)      # (BS, K, P+1)
+    # dense-band scatter then integer GEMM
+    m = jnp.arange(grid.n_basis, dtype=jnp.int32)
+    rel = m - (k[..., None] - P)
+    inside = (rel >= 0) & (rel <= P)
+    dense = jnp.where(
+        inside, jnp.take_along_axis(bvals, jnp.clip(rel, 0, P), axis=-1), 0
+    )
+    return jnp.einsum(
+        "bkm,kmn->bn", dense, coeff_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )

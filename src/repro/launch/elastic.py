@@ -1,0 +1,34 @@
+"""Elastic re-meshing (DESIGN.md §4): restore a checkpoint onto a DIFFERENT
+mesh than it was written from.
+
+Checkpoints store full logical arrays (checkpoint/store.py), so elasticity
+reduces to recomputing shardings for the new mesh from the same logical-axis
+tree and device_put-ing each leaf. This is what a 512-chip -> 256-chip
+failover (or a scale-up) does at the controller level; the unit test
+exercises 1-device -> k-fake-device resharding."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import store
+from repro.dist import sharding as SH
+from repro.models import lm
+from repro.optim import adamw
+
+
+def restore_elastic(ckpt_dir: str, step: int, model_cfg, new_mesh, pdtype):
+    """-> (params, opt_state, manifest) resharded for ``new_mesh``."""
+    axes = lm.param_axes(model_cfg)
+    abs_params = lm.abstract_params(model_cfg, dtype=pdtype)
+    pshard = SH.tree_shardings(axes, abs_params, new_mesh)
+    abs_opt = jax.eval_shape(adamw.init_state, abs_params)
+    oshard = {
+        "m": SH.tree_zero_shardings(axes, abs_params, new_mesh),
+        "v": SH.tree_zero_shardings(axes, abs_params, new_mesh),
+        "step": jax.sharding.NamedSharding(new_mesh, jax.sharding.PartitionSpec()),
+    }
+    (params, opt_state), manifest = store.restore(
+        ckpt_dir, step, (abs_params, abs_opt), shardings=(pshard, oshard)
+    )
+    return params, opt_state, manifest

@@ -1,0 +1,26 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (TPU v5e pod slice); 2x16x16 = 512 multi-pod.
+
+    Axis roles (DESIGN.md §4): ``pod`` = data-parallel across pods (slow
+    inter-pod links carry only gradient all-reduces / batch splits),
+    ``data`` = in-pod DP + KV-cache seq sharding, ``model`` = TP/EP.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host offers (CPU smoke/examples): 1 device -> 1x1."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,440 @@
+"""Attention: GQA/MQA, MLA (DeepSeek-V2), sliding-window, flash-style
+chunked softmax, and cached decode steps.
+
+The training/prefill path uses a memory-efficient blockwise attention
+(online softmax over KV chunks under ``lax.scan``) so 32k-token prefill
+compiles with bounded live memory — no TPU kernel required for the dry-run
+(and cost_analysis stays complete; see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import ParamCtx
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: int | None = None        # sliding-window size (gemma3 local layers)
+    rope_theta: float = 10000.0
+    qk_norm: bool = False            # gemma3-style RMS q/k norm
+    # MLA (deepseek-v2): when kv_lora_rank is set, K/V come from a shared
+    # compressed latent that is also what the serving cache stores.
+    kv_lora_rank: int | None = None
+    qk_rope_dim: int = 64
+    # Serving-memory features (DESIGN.md §4):
+    # * windowed layers allocate a RING BUFFER of `window` slots instead of
+    #   max_seq (gemma3 local layers: 32x cache cut at 32k);
+    # * kv_quant stores the cache in int8 with a per-(token, kv-head) fp32
+    #   scale (2x over bf16; what makes qwen1.5-32b decode_32k fit 16 GB).
+    kv_quant: bool = False
+    # Sequence-parallel attention (SecPerf iteration 5, prefill/train): shard
+    # the QUERY sequence over the given spec (e.g. (("data",), "model", None,
+    # None)) and replicate K/V over the model axis. The right call when
+    # heads/kv_heads cannot shard (paligemma MQA: kv=1, 8 heads vs model=16)
+    # — each shard attends its query block against full (tiny) KV instead of
+    # all-reducing (B,H,T,T) score partials.
+    sp_spec: tuple | None = None
+
+    def cache_len(self, max_seq: int) -> int:
+        return min(max_seq, self.window) if self.window else max_seq
+
+
+def attn_init(ctx: ParamCtx, cfg: AttnConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_lora_rank is None:
+        p = {
+            "wq": ctx.make((d, h, hd), ("embed", "heads", "head_dim")),
+            "wk": ctx.make((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+            "wv": ctx.make((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+            "wo": ctx.make((h, hd, d), ("heads", "head_dim", "embed")),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = ctx.make((h, hd), ("heads", "head_dim"), init="zeros")
+            p["bk"] = ctx.make((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+            p["bv"] = ctx.make((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    else:
+        r, rope = cfg.kv_lora_rank, cfg.qk_rope_dim
+        nope = hd  # qk_nope dim == head_dim (v_head_dim == head_dim too)
+        p = {
+            "wq": ctx.make((d, h, nope + rope), ("embed", "heads", "head_dim")),
+            "w_dkv": ctx.make((d, r + rope), ("embed", "kv_lora")),
+            "w_uk": ctx.make((r, h, nope), ("kv_lora", "heads", "head_dim")),
+            "w_uv": ctx.make((r, h, hd), ("kv_lora", "heads", "head_dim")),
+            "wo": ctx.make((h, hd, d), ("heads", "head_dim", "embed")),
+            "kv_norm": ctx.make((r,), ("kv_lora",), init="ones"),
+        }
+    if cfg.qk_norm:
+        p["q_norm"] = ctx.make((hd,), ("head_dim",), init="ones")
+        p["k_norm"] = ctx.make((hd,), ("head_dim",), init="ones")
+    return p
+
+
+def _qk_rmsnorm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention.
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, Tq, H, D)
+    k: jax.Array,                  # (B, Tk, KV, D)
+    v: jax.Array,                  # (B, Tk, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,             # absolute position of q[0] (decode/prefill)
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; O(Tq·chunk) live memory.
+
+    K and V may have different head dims (MLA: K carries nope+rope, V not).
+    """
+    B, Tq, H, D = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, Tk)
+    n_chunks = math.ceil(Tk / chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Tq)
+    qh = q.reshape(B, Tq, KV, rep, D)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, (kb, vb) = inp
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("btgrd,bsgd->bgrts", qh, kb) * scale   # (B,KV,rep,Tq,chunk)
+        mask = kv_pos[None, :] <= Tk - 1  # drop padded keys
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s.astype(jnp.float32), NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrts,bsgd->bgrtd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, rep, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Tq), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), (kc, vc))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention blocks (projections + rotary + flash) and decode steps.
+# ---------------------------------------------------------------------------
+
+
+def attn_forward(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, T, d_model)
+    *,
+    positions: jax.Array | None = None,
+    chunk: int = 1024,
+    return_cache: bool = False,
+):
+    """Training/prefill attention. With ``return_cache``, also returns the
+    post-rotary K/V (or the MLA latent) — exactly what the decode cache
+    stores, so prefill fills caches for free."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    if cfg.kv_lora_rank is not None:
+        return _mla_forward(params, cfg, x, positions, chunk, return_cache)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(q, params["q_norm"])
+        k = _qk_rmsnorm(k, params["k_norm"])
+    cos, sin = L.rotary_embedding(positions, cfg.head_dim, cfg.rope_theta, x.dtype)
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    if cfg.sp_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+
+        bspec = cfg.sp_spec[0]
+        q = jax.lax.with_sharding_constraint(q, _P(*cfg.sp_spec))
+        k = jax.lax.with_sharding_constraint(k, _P(bspec, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, _P(bspec, None, None, None))
+    o = flash_attention(q, k, v, causal=True, window=cfg.window, chunk=chunk)
+    if cfg.sp_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+
+        o = jax.lax.with_sharding_constraint(o, _P(*cfg.sp_spec))
+    y = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+    if return_cache:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def _mla_forward(params, cfg: AttnConfig, x, positions, chunk, return_cache=False):
+    """DeepSeek-V2 Multi-head Latent Attention (training/prefill)."""
+    B, T, _ = x.shape
+    hd, rope = cfg.head_dim, cfg.qk_rope_dim
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    ckv = x @ params["w_dkv"].astype(x.dtype)          # (B, T, r + rope)
+    c_kv, k_rope_raw = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = _qk_rmsnorm(c_kv, params["kv_norm"])
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("btr,rhk->bthk", c_kv, params["w_uv"].astype(x.dtype))
+    cos, sin = L.rotary_embedding(positions, rope, cfg.rope_theta, x.dtype)
+    q_rope = L.apply_rotary(q_rope, cos, sin)
+    k_rope = L.apply_rotary(k_rope_raw[..., None, :], cos, sin)
+    k_rope1 = k_rope[..., 0, :]                        # (B, T, rope), shared
+    k_rope = jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (rope,))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, k_rope], -1)
+    o = flash_attention(q_full, k_full, v, causal=True, chunk=chunk)
+    y = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+    if return_cache:
+        # cache stores the *unnormalised* latent + rotated rope key, matching
+        # mla_decode_step's layout
+        ckv_cache = jnp.concatenate([ckv[..., : cfg.kv_lora_rank], k_rope1], -1)
+        return y, {"ckv": ckv_cache}
+    return y
+
+
+def _kv_quantize(k: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., KV, D) -> int8 values + per-(..., KV) fp32 scale."""
+    scale = jnp.maximum(jnp.max(jnp.abs(k.astype(jnp.float32)), -1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _write_cache(cache: dict, name: str, val: jax.Array, slot: jax.Array, quant: bool):
+    """Write one token's K or V into the (ring) cache at ``slot``.
+
+    Two regimes (EXPERIMENTS.md §Perf iterations 1 & 4):
+
+    * **synchronized decode** (scalar ``slot`` — every sequence at the same
+      position, the common serving case): ``dynamic_update_slice`` — GSPMD
+      keeps it fully local under any cache sharding (no collectives);
+    * **ragged decode** (per-batch ``slot``, continuous batching): indexed
+      scatter. GSPMD's scatter partitioning all-gathers a batch-sharded
+      operand (measured: 7.06 GB/step on gemma3 decode_32k), so ragged mode
+      costs collectives — the engine uses synchronized buckets by default.
+
+    Both replace the original masked-arithmetic update, which materialised
+    two cache-sized temporaries (+13 GB/device on qwen1.5-32b decode_32k).
+    """
+    sync = slot.ndim == 0
+    if quant:
+        qv, sc = _kv_quantize(val)                            # (B,1,KV,D)
+        if sync:
+            cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], qv, slot, axis=1)
+            cache[name + "_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name + "_scale"], sc, slot, axis=1)
+        else:
+            b_idx = jnp.arange(val.shape[0])
+            cache[name] = cache[name].at[b_idx, slot].set(qv[:, 0])
+            cache[name + "_scale"] = cache[name + "_scale"].at[b_idx, slot].set(sc[:, 0])
+    else:
+        v = val.astype(cache[name].dtype)
+        if sync:
+            cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], v, slot, axis=1)
+        else:
+            b_idx = jnp.arange(val.shape[0])
+            cache[name] = cache[name].at[b_idx, slot].set(v[:, 0])
+    return cache
+
+
+def _read_cache(cache: dict, name: str, quant: bool, dtype):
+    if quant:
+        return (
+            cache[name].astype(jnp.float32) * cache[name + "_scale"][..., None]
+        ).astype(dtype)
+    return cache[name].astype(dtype)
+
+
+def attn_decode_step(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, 1, d_model)
+    cache: dict,                    # {"k","v"[, "k_scale","v_scale"]}
+    pos: jax.Array,                 # (B,) current absolute position
+) -> tuple[jax.Array, dict]:
+    """One-token decode against a pre-filled KV cache.
+
+    Windowed layers use a ring buffer: slot = pos % window. Rotary is applied
+    *before* caching, so scores never need absolute slot positions; validity
+    is "slot written", which is within-window by construction.
+
+    ``pos`` may be scalar (synchronized decode — collective-free cache
+    writes) or per-batch ``(B,)`` (ragged/continuous batching).
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    pos_b = jnp.broadcast_to(pos, (B,))          # per-batch view for masks
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(q, params["q_norm"])
+        k = _qk_rmsnorm(k, params["k_norm"])
+    cos, sin = L.rotary_embedding(pos_b[:, None], cfg.head_dim, cfg.rope_theta, x.dtype)
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    slot = pos % S if cfg.window else pos
+    cache = dict(cache)
+    cache = _write_cache(cache, "k", k, slot, cfg.kv_quant)
+    cache = _write_cache(cache, "v", v, slot, cfg.kv_quant)
+
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // KV
+    qh = q.reshape(B, KV, rep, D)
+    if not cfg.kv_quant:
+        # One-shot attention read: decode scores are only (B,KV,rep,S) —
+        # small — and a single einsum + softmax lets GSPMD run the
+        # distributed-softmax pattern when the cache is seq-sharded
+        # (SecPerf iteration 4). Chunking is only needed to bound the
+        # dequantisation temp of int8 caches (below).
+        ck = cache["k"].astype(x.dtype)
+        cv = cache["v"].astype(x.dtype)
+        s = jnp.einsum("bgrd,bsgd->bgrs", qh, ck) / math.sqrt(D)
+        kv_slot = jnp.arange(S)[None, :]
+        if cfg.window:
+            mask = (kv_slot <= pos_b[:, None]) | (pos_b[:, None] >= S)
+        else:
+            mask = kv_slot <= pos_b[:, None]
+        s = jnp.where(mask[:, None, None], s.astype(jnp.float32), NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrs,bsgd->bgrd", p.astype(cv.dtype), cv)
+        o = o.reshape(B, 1, H, D).astype(x.dtype)
+        y = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+        return y, cache
+    # int8 cache: flash-decode chunks bound the dequant temp
+    # (EXPERIMENTS.md SecPerf iteration 1: -21 GB on qwen1.5-32b decode_32k)
+    chunk = min(8192, S)
+    n_chunks = (S + chunk - 1) // chunk
+    assert S % chunk == 0 or n_chunks == 1, "cache length is chunk-aligned"
+
+    def read_chunk(name, ci):
+        raw = jax.lax.dynamic_slice_in_dim(cache[name], ci * chunk, chunk, 1)
+        if cfg.kv_quant:
+            sc = jax.lax.dynamic_slice_in_dim(
+                cache[name + "_scale"], ci * chunk, chunk, 1
+            )
+            return (raw.astype(jnp.float32) * sc[..., None]).astype(x.dtype)
+        return raw.astype(x.dtype)
+
+    def step(carry, ci):
+        m_p, l_p, acc_p = carry
+        kb = read_chunk("k", ci)                              # (B,chunk,KV,D)
+        vb = read_chunk("v", ci)
+        s = jnp.einsum("bgrd,bsgd->bgrs", qh, kb) / math.sqrt(D)
+        kv_slot = ci * chunk + jnp.arange(chunk)[None, :]
+        if cfg.window:
+            mask = (kv_slot <= pos_b[:, None]) | (pos_b[:, None] >= S)
+        else:
+            mask = kv_slot <= pos_b[:, None]
+        s = jnp.where(mask[:, None, None], s.astype(jnp.float32), NEG_INF)
+        m_new = jnp.maximum(m_p, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_p - m_new)
+        l_new = l_p * corr + p.sum(-1)
+        acc = acc_p * corr[..., None] + jnp.einsum(
+            "bgrs,bsgd->bgrd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KV, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    o = o.reshape(B, 1, H, D)
+    y = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+    return y, cache
+
+
+def mla_decode_step(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, 1, d_model)
+    cache_ckv: jax.Array,           # (B, S, r + rope) — the compressed latent
+    pos: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """MLA decode: the cache stores only the (r + rope)-dim latent — the
+    memory win that makes DeepSeek-V2 serving cheap."""
+    B = x.shape[0]
+    S = cache_ckv.shape[1]
+    pos_b = jnp.broadcast_to(pos, (B,))
+    r, rope, hd = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    ckv_new = x @ params["w_dkv"].astype(x.dtype)             # (B, 1, r+rope)
+    cos, sin = L.rotary_embedding(pos_b[:, None], rope, cfg.rope_theta, x.dtype)
+    q_rope = L.apply_rotary(q_rope, cos, sin)
+    rotated = L.apply_rotary(ckv_new[..., None, r:], cos, sin)[..., 0, :]
+    ckv_new = jnp.concatenate([ckv_new[..., :r], rotated], -1)
+    if pos.ndim == 0:  # synchronized decode: collective-free DUS
+        cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache_ckv, ckv_new.astype(cache_ckv.dtype), pos, axis=1)
+    else:
+        cache_ckv = cache_ckv.at[jnp.arange(B), pos_b].set(
+            ckv_new[:, 0].astype(cache_ckv.dtype)
+        )
+
+    c_kv = _qk_rmsnorm(cache_ckv[..., :r], params["kv_norm"])  # (B, S, r)
+    k_rope = cache_ckv[..., r:]                                # (B, S, rope)
+    # Absorbed-weight trick: score = q_nope·(W_uk c) + q_rope·k_rope
+    q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["w_uk"].astype(x.dtype))
+    s = jnp.einsum("bhr,bsr->bhs", q_abs[:, 0], c_kv)
+    s = s + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], k_rope)
+    s = s / math.sqrt(hd + rope)
+    mask = jnp.arange(S)[None, :] <= pos_b[:, None]
+    s = jnp.where(mask[:, None], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c_kv)                # (B, H, r)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, params["w_uv"].astype(x.dtype))
+    y = jnp.einsum("bhk,hkd->bd", o, params["wo"].astype(x.dtype))[:, None]
+    return y, cache_ckv

@@ -1,0 +1,303 @@
+"""Composable decoder blocks.
+
+A model is a *pattern* of blocks (DESIGN.md §3): a repeating unit scanned
+``n_repeats`` times (stacked params, O(1) HLO in depth) plus optional
+prologue/epilogue blocks and *shared* blocks (zamba2's shared attention:
+one parameter set invoked at several depths).
+
+Block kinds: ``attn_mlp``, ``attn_moe``, ``mamba2``, ``mlstm``, ``slstm``,
+``attn_kan`` (the paper's technique as an FFN replacement), and the windowed
+variants via ``AttnConfig.window``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kan_layer as KL
+from repro.core.bspline import SplineGrid
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.layers import ParamCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    kind: str
+    attn: A.AttnConfig | None = None
+    d_ff: int = 0                       # dense (SwiGLU) FFN hidden size
+    moe: M.MoEConfig | None = None
+    mamba: S.Mamba2Config | None = None
+    xlstm: X.XLSTMConfig | None = None
+    kan_grid: SplineGrid | None = None  # attn_kan
+    kan_ff: int = 0
+    shared_id: int | None = None        # reference into the model's shared set
+
+
+def _mlp_init(ctx: ParamCtx, d: int, ff: int) -> dict:
+    return {
+        "wi": ctx.make((d, ff), ("embed", "ffn")),
+        "wg": ctx.make((d, ff), ("embed", "ffn")),
+        "wo": ctx.make((ff, d), ("ffn", "embed")),
+    }
+
+
+def _mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = x @ params["wi"].astype(x.dtype)
+    g = x @ params["wg"].astype(x.dtype)
+    return (jax.nn.silu(g) * h) @ params["wo"].astype(x.dtype)
+
+
+def _kan_ffn_init(ctx: ParamCtx, d: int, ff: int, grid: SplineGrid) -> dict:
+    """KAN FFN: two spline layers d -> ff -> d (the paper's technique as a
+    first-class FFN replacement; coefficients carry the basis axis)."""
+    M_ = grid.n_basis
+    return {
+        "c1": ctx.make((d, M_, ff), ("embed", None, "ffn"), scale=0.02),
+        "b1": ctx.make((d, ff), ("embed", "ffn"), scale=0.02),
+        "c2": ctx.make((ff, M_, d), ("ffn", None, "embed"), scale=0.02),
+        "b2": ctx.make((ff, d), ("ffn", "embed"), scale=0.02),
+    }
+
+
+def _kan_ffn(params: dict, x: jax.Array, grid: SplineGrid) -> jax.Array:
+    lead = x.shape[:-1]
+    xf = jnp.tanh(x.reshape(-1, x.shape[-1]))   # squash into the spline domain
+    h = KL.kan_layer_dense({"coeff": params["c1"], "base_w": params["b1"]}, xf, grid)
+    h = jnp.tanh(h)
+    y = KL.kan_layer_dense({"coeff": params["c2"], "base_w": params["b2"]}, h, grid)
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
+def block_init(ctx: ParamCtx, d_model: int, blk: BlockCfg) -> dict:
+    p: dict = {"ln1": L.rmsnorm_init(ctx, d_model)}
+    if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
+        p["attn"] = A.attn_init(ctx, blk.attn)
+        p["ln2"] = L.rmsnorm_init(ctx, d_model)
+        if blk.kind == "attn_mlp":
+            p["mlp"] = _mlp_init(ctx, d_model, blk.d_ff)
+        elif blk.kind == "attn_moe":
+            p["moe"] = M.moe_init(ctx, blk.moe)
+        else:
+            p["kan"] = _kan_ffn_init(ctx, d_model, blk.kan_ff, blk.kan_grid)
+    elif blk.kind == "mamba2":
+        p["mamba"] = S.mamba2_init(ctx, blk.mamba)
+    elif blk.kind == "mlstm":
+        p["mlstm"] = X.mlstm_init(ctx, blk.xlstm)
+    elif blk.kind == "slstm":
+        p["slstm"] = X.slstm_init(ctx, blk.xlstm)
+    else:
+        raise ValueError(blk.kind)
+    return p
+
+
+def block_apply(
+    params: dict,
+    blk: BlockCfg,
+    x: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    chunk: int = 1024,
+) -> tuple[jax.Array, dict]:
+    """Pre-norm residual application; returns (x, aux_losses)."""
+    aux: dict = {}
+    h = L.rmsnorm(params["ln1"], x)
+    if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
+        x = x + A.attn_forward(params["attn"], blk.attn, h, positions=positions, chunk=chunk)
+        h2 = L.rmsnorm(params["ln2"], x)
+        if blk.kind == "attn_mlp":
+            x = x + _mlp(params["mlp"], h2)
+        elif blk.kind == "attn_moe":
+            y, aux = M.moe_forward(params["moe"], blk.moe, h2)
+            x = x + y
+        else:
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid)
+    elif blk.kind == "mamba2":
+        x = x + S.mamba2_forward(params["mamba"], blk.mamba, h)
+    elif blk.kind == "mlstm":
+        x = x + X.mlstm_forward(params["mlstm"], blk.xlstm, h)
+    elif blk.kind == "slstm":
+        x = x + X.slstm_forward(params["slstm"], blk.xlstm, h)
+    return x, aux
+
+
+# ----------------------------- decode support -------------------------------
+
+
+def block_init_cache(
+    blk: BlockCfg, batch: int, max_seq: int, dtype
+) -> dict:
+    """Per-block decode state (KV cache / SSM state / LSTM state).
+
+    Windowed attention allocates a ``window``-slot ring buffer; kv_quant
+    stores int8 values + per-(token, kv-head) fp32 scales."""
+    if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
+        c = blk.attn
+        if c.kv_lora_rank is not None:
+            return {
+                "ckv": jnp.zeros(
+                    (batch, max_seq, c.kv_lora_rank + c.qk_rope_dim), dtype
+                )
+            }
+        S_ = c.cache_len(max_seq)
+        kv_dtype = jnp.int8 if c.kv_quant else dtype
+        cache = {
+            "k": jnp.zeros((batch, S_, c.n_kv_heads, c.head_dim), kv_dtype),
+            "v": jnp.zeros((batch, S_, c.n_kv_heads, c.head_dim), kv_dtype),
+        }
+        if c.kv_quant:
+            cache["k_scale"] = jnp.zeros((batch, S_, c.n_kv_heads), jnp.float32)
+            cache["v_scale"] = jnp.zeros((batch, S_, c.n_kv_heads), jnp.float32)
+        return cache
+    if blk.kind == "mamba2":
+        return S.mamba2_init_state(blk.mamba, batch, dtype)
+    if blk.kind == "mlstm":
+        return X.mlstm_init_state(blk.xlstm, batch, dtype)
+    if blk.kind == "slstm":
+        return X.slstm_init_state(blk.xlstm, batch, dtype)
+    raise ValueError(blk.kind)
+
+
+def block_prefill(
+    params: dict,
+    blk: BlockCfg,
+    x: jax.Array,                  # (B, T, d)
+    *,
+    positions: jax.Array | None = None,
+    max_seq: int,
+    chunk: int = 1024,
+) -> tuple[jax.Array, dict]:
+    """Forward + decode-cache production (KV padded to ``max_seq``)."""
+    B, T, _ = x.shape
+    h = L.rmsnorm(params["ln1"], x)
+    if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
+        c = blk.attn
+        y, kv = A.attn_forward(
+            params["attn"], c, h, positions=positions, chunk=chunk,
+            return_cache=True,
+        )
+        if "k" in kv:  # GQA path: ring placement + optional int8
+            S_ = c.cache_len(max_seq)
+            if c.window and S_ < T:
+                # ring semantics: slot s holds the latest position p < T with
+                # p % S_ == s (matches decode's slot = pos % window)
+                s_idx = jnp.arange(S_)
+                p_s = (T - 1) - ((T - 1 - s_idx) % S_)
+                kv = jax.tree.map(lambda a: a[:, p_s], kv)
+            elif S_ > T:
+                kv = jax.tree.map(
+                    lambda a: jnp.pad(
+                        a, ((0, 0), (0, S_ - T)) + ((0, 0),) * (a.ndim - 2)
+                    ),
+                    kv,
+                )
+            if c.kv_quant:
+                kq, ks = A._kv_quantize(kv["k"])
+                vq, vs = A._kv_quantize(kv["v"])
+                cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                cache = kv
+        else:  # MLA latent cache
+            pad = max_seq - T
+            cache = jax.tree.map(
+                lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0))), kv
+            )
+        x = x + y
+        h2 = L.rmsnorm(params["ln2"], x)
+        if blk.kind == "attn_mlp":
+            x = x + _mlp(params["mlp"], h2)
+        elif blk.kind == "attn_moe":
+            y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
+            x = x + y2
+        else:
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid)
+        return x, cache
+    if blk.kind == "mamba2":
+        y, st = S.mamba2_forward(params["mamba"], blk.mamba, h, return_state=True)
+    elif blk.kind == "mlstm":
+        y, st = X.mlstm_forward(params["mlstm"], blk.xlstm, h, return_state=True)
+    elif blk.kind == "slstm":
+        y, st = X.slstm_forward(params["slstm"], blk.xlstm, h, return_state=True)
+    else:
+        raise ValueError(blk.kind)
+    return x + y, st
+
+
+def block_cache_axes(blk: BlockCfg) -> dict:
+    """Logical axes of the decode state (mirrors block_init_cache).
+
+    ``seq_cache`` lets long-context decode shard the KV cache's sequence dim
+    on the data axis when the batch cannot occupy it (long_500k, B=1).
+    """
+    from repro.models.layers import Axes
+
+    if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
+        if blk.attn.kv_lora_rank is not None:
+            return {"ckv": Axes(("batch", "seq_cache", "kv_lora"))}
+        axes = {
+            "k": Axes(("batch", "seq_cache", "kv_heads", "head_dim")),
+            "v": Axes(("batch", "seq_cache", "kv_heads", "head_dim")),
+        }
+        if blk.attn.kv_quant:
+            axes["k_scale"] = Axes(("batch", "seq_cache", "kv_heads"))
+            axes["v_scale"] = Axes(("batch", "seq_cache", "kv_heads"))
+        return axes
+    if blk.kind == "mamba2":
+        return {
+            "ssm": Axes(("batch", "heads", "state", "head_dim")),
+            "conv": Axes(("batch", None, "ffn")),
+        }
+    if blk.kind == "mlstm":
+        return {
+            "C": Axes(("batch", "heads", "head_dim", "head_dim")),
+            "n": Axes(("batch", "heads", "head_dim")),
+            "m": Axes(("batch", "heads")),
+            "conv": Axes(("batch", None, "ffn")),
+        }
+    if blk.kind == "slstm":
+        # sLSTM gates are per-unit: all four state tensors are (B, H, hd)
+        ax = Axes(("batch", "heads", "head_dim"))
+        return {"c": ax, "n": ax, "h": ax, "m": ax}
+    raise ValueError(blk.kind)
+
+
+def block_decode_step(
+    params: dict,
+    blk: BlockCfg,
+    x: jax.Array,               # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,             # (B,)
+) -> tuple[jax.Array, dict]:
+    h = L.rmsnorm(params["ln1"], x)
+    if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
+        c = blk.attn
+        if c.kv_lora_rank is not None:
+            y, ckv = A.mla_decode_step(params["attn"], c, h, cache["ckv"], pos)
+            cache = {"ckv": ckv}
+        else:
+            y, cache = A.attn_decode_step(params["attn"], c, h, cache, pos)
+        x = x + y
+        h2 = L.rmsnorm(params["ln2"], x)
+        if blk.kind == "attn_mlp":
+            x = x + _mlp(params["mlp"], h2)
+        elif blk.kind == "attn_moe":
+            y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
+            x = x + y2
+        else:
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid)
+        return x, cache
+    if blk.kind == "mamba2":
+        y, cache = S.mamba2_decode_step(params["mamba"], blk.mamba, h, cache)
+    elif blk.kind == "mlstm":
+        y, cache = X.mlstm_decode_step(params["mlstm"], blk.xlstm, h, cache)
+    elif blk.kind == "slstm":
+        y, cache = X.slstm_decode_step(params["slstm"], blk.xlstm, h, cache)
+    else:
+        raise ValueError(blk.kind)
+    return x + y, cache

@@ -1,0 +1,145 @@
+"""Analytic cost helpers for the roofline (EXPERIMENTS.md §Roofline).
+
+Two uses:
+
+* ``model_flops`` — the brief's MODEL_FLOPS = 6·N·D (train) / 2·N_active·D
+  (inference) reference, with MoE active-parameter accounting;
+* ``recurrent_adders`` — xLSTM's mLSTM/sLSTM recurrence runs as a
+  ``lax.scan`` over time whose body XLA's cost_analysis counts once; the
+  cost-faithful dry-run adds (T-1) analytic bodies back (everything else is
+  loop-free in cost mode — see launch/dryrun.py --costmode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import ModelConfig
+
+
+def n_params(model: ModelConfig) -> int:
+    import math
+
+    from repro.models import lm
+
+    abs_p = lm.abstract_params(model)
+    # python-int product: jnp.prod overflows int32 on >2B-element tensors
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(abs_p))
+
+
+def n_active_params(model: ModelConfig) -> int:
+    """Params touched per token: routed experts scaled by top_k/E."""
+    total = n_params(model)
+    inactive = 0
+    for blocks, mult in (
+        (model.unit, model.n_repeats),
+        (model.prologue, 1),
+        (model.epilogue, 1),
+    ):
+        for b in blocks:
+            if b.kind == "attn_moe" and b.moe is not None:
+                m = b.moe
+                per_expert = m.d_model * m.d_ff * (3 if m.gated else 2)
+                routed = m.n_experts * per_expert
+                active = m.top_k * per_expert
+                inactive += mult * (routed - active)
+    return total - inactive
+
+
+def model_flops(model: ModelConfig, tokens: int, mode: str) -> float:
+    """6·N_active·D for train, 2·N_active·D for prefill/decode forward."""
+    na = n_active_params(model)
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * na * tokens
+
+
+def analytic_hbm_bytes(
+    model: ModelConfig, *, global_batch: int, seq: int, mode: str,
+    n_devices: int, tp: int = 16, param_bytes: int = 2,
+) -> float:
+    """Fusion-aware analytic HBM traffic per device (lower bound).
+
+    XLA's `bytes accessed` counts every HLO operand (pre-fusion) — on TPU,
+    fusion keeps attention score tiles, softmax temps etc. in VMEM, so the
+    honest roofline brackets memory between this analytic lower bound and
+    the HLO upper bound (EXPERIMENTS.md §Roofline).
+
+    Terms: parameter reads (x passes), activation saves/reads at remat
+    boundaries, KV-cache traffic, logits.
+    """
+    from repro.models import lm as _lm
+    import jax as _jax
+    import jax.numpy as _jnp
+
+    n = n_params(model)
+    tokens_dev = global_batch * (seq if mode != "decode" else 1) / n_devices
+    d = model.d_model
+    L = model.n_layers
+    # parameter passes: fwd + bwd + opt (train) / single read (inference)
+    passes = 4.0 if mode == "train" else 1.0
+    p_bytes = n / tp * param_bytes * passes
+    act_bytes = 0.0
+    if mode == "train":
+        # remat=unit: save + re-read one activation per unit boundary, then
+        # recompute: 2 saves+reads per repeat + logits fp32
+        act_bytes = model.n_repeats * tokens_dev * d * 2 * 4
+        act_bytes += tokens_dev * model.vocab * 4 * 2 / tp
+    elif mode == "prefill":
+        abs_c = _jax.eval_shape(
+            lambda: _lm.init_caches(model, global_batch, seq, _jnp.bfloat16))
+        cache = sum(
+            int(np_prod(l.shape)) * l.dtype.itemsize
+            for l in _jax.tree.leaves(abs_c)
+        )
+        act_bytes = cache / n_devices + tokens_dev * model.vocab * 4 / tp
+    else:  # decode: read the whole cache once
+        abs_c = _jax.eval_shape(
+            lambda: _lm.init_caches(model, global_batch, seq, _jnp.bfloat16))
+        cache = sum(
+            int(np_prod(l.shape)) * l.dtype.itemsize
+            for l in _jax.tree.leaves(abs_c)
+        )
+        act_bytes = cache / n_devices
+    return p_bytes + act_bytes
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def recurrent_adders(model: ModelConfig, batch: int, T: int, mode: str) -> dict:
+    """FLOPs/bytes of (T-1) extra recurrence-body steps for mLSTM/sLSTM
+    blocks (per rep), scaled by repeats. Decode (T=1) needs no adder."""
+    if T <= 1:
+        return {"flops": 0.0, "bytes": 0.0}
+    flops = 0.0
+    bytes_ = 0.0
+    fwd_mult = 3.0 if mode == "train" else 1.0  # bwd ~ 2x fwd
+    for blocks, mult in (
+        (model.unit, model.n_repeats),
+        (model.prologue, 1),
+        (model.epilogue, 1),
+    ):
+        for b in blocks:
+            if (b.kind == "mlstm" and b.xlstm is not None
+                    and b.xlstm.mlstm_impl != "chunked"):
+                # chunked mLSTM runs loop-free in cost mode (scan_unroll):
+                # no adder — its state traffic is counted by XLA directly
+                H, D = b.xlstm.n_heads, b.xlstm.head_dim
+                # per step: C update (2 fma over H·D²) + decay mult + n/den/num
+                body_f = batch * H * (6.0 * D * D + 6.0 * D)
+                body_b = batch * H * D * D * 4.0 * 4  # C read+write fp32
+                flops += mult * (T - 1) * body_f * fwd_mult
+                bytes_ += mult * (T - 1) * body_b * fwd_mult
+            if b.kind == "slstm" and b.xlstm is not None:
+                H = b.xlstm.n_heads
+                hd = model.d_model // H
+                body_f = batch * (4 * H * hd * hd * 2 + 12 * H * hd)
+                body_b = batch * H * hd * 4.0 * 8
+                flops += mult * (T - 1) * body_f * fwd_mult
+                bytes_ += mult * (T - 1) * body_b * fwd_mult
+    return {"flops": flops, "bytes": bytes_}

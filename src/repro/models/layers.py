@@ -1,0 +1,157 @@
+"""Parameter machinery + basic NN layers (pure JAX, no flax).
+
+Every parameter is created through a :class:`ParamCtx`, which runs the same
+model-definition code in three modes:
+
+* ``init``     — real arrays (smoke tests, examples, training);
+* ``abstract`` — ``jax.ShapeDtypeStruct`` stand-ins (the multi-pod dry-run:
+  no allocation, shardable);
+* ``axes``     — :class:`Axes` leaves naming the *logical* axes of each
+  parameter (consumed by ``repro.dist.sharding`` to build PartitionSpecs).
+
+This single-source-of-truth pattern guarantees the three trees are
+structurally identical, which the dry-run and checkpointing rely on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical axis names of one parameter; a pytree *leaf* (deliberately NOT
+    registered with jax.tree_util, so tree.map visits it as a leaf)."""
+
+    names: tuple[str | None, ...]
+
+
+class ParamCtx:
+    """Single-source-of-truth parameter factory (see module docstring)."""
+
+    def __init__(self, mode: str, key: jax.Array | None = None, dtype=jnp.float32):
+        assert mode in ("init", "abstract", "axes")
+        if mode == "init" and key is None:
+            raise ValueError("init mode needs a PRNG key")
+        self.mode = mode
+        self._key = key
+        self.dtype = dtype
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def make(
+        self,
+        shape: tuple[int, ...],
+        axes: tuple[str | None, ...],
+        init: str = "normal",
+        scale: float | None = None,
+        dtype=None,
+    ):
+        assert len(shape) == len(axes), (shape, axes)
+        dtype = dtype or self.dtype
+        if self.mode == "axes":
+            return Axes(tuple(axes))
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if scale is None:
+            # fan-in scaling over all but the last axis
+            fan_in = max(1, math.prod(shape[:-1]))
+            scale = 1.0 / math.sqrt(fan_in)
+        return (scale * jax.random.normal(self._next_key(), shape)).astype(dtype)
+
+    def stacked(self, n: int, fn: Callable[["ParamCtx"], dict]) -> dict:
+        """Stack ``n`` copies of a sub-tree along a new leading 'layers' axis
+        (the scan-over-layers representation)."""
+        if self.mode == "axes":
+            t = fn(self)
+            return jax.tree.map(lambda a: Axes(("layers",) + a.names), t)
+        if self.mode == "abstract":
+            t = fn(self)
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), t
+            )
+        trees = [fn(self) for _ in range(n)]
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Basic layers.
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(ctx: ParamCtx, dim: int) -> dict:
+    return {"scale": ctx.make((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def embed_init(ctx: ParamCtx, vocab: int, dim: int) -> dict:
+    return {"table": ctx.make((vocab, dim), ("vocab", "embed"), scale=1.0)}
+
+
+def embed_lookup(params: dict, ids: jax.Array, compute_dtype) -> jax.Array:
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def unembed_logits(params: dict, h: jax.Array) -> jax.Array:
+    """Tied unembedding: logits in fp32 for a stable softmax/xent."""
+    return jnp.einsum(
+        "...d,vd->...v", h.astype(jnp.float32), params["table"].astype(jnp.float32)
+    )
+
+
+def rotary_embedding(
+    positions: jax.Array, head_dim: int, theta: float = 10000.0, dtype=jnp.float32
+) -> tuple[jax.Array, jax.Array]:
+    """(positions...) -> cos/sin of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., T, H, D); cos/sin: (..., T, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def linear_init(
+    ctx: ParamCtx,
+    in_dim: int,
+    out_dim: int,
+    axes: tuple[str | None, str | None],
+    bias: bool = False,
+    scale: float | None = None,
+) -> dict:
+    p = {"w": ctx.make((in_dim, out_dim), axes, scale=scale)}
+    if bias:
+        p["b"] = ctx.make((out_dim,), (axes[1],), init="zeros")
+    return p
+
+
+def linear(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,388 @@
+"""Decoder LM: pattern-of-blocks with scan-over-repeats.
+
+The model is ``prologue + unit * n_repeats + epilogue`` (DESIGN.md §3);
+the unit's parameters are stacked along a leading 'layers' axis and driven
+by ``lax.scan``, so the HLO is O(unit length), not O(depth) — this is what
+makes 64-layer × 512-device dry-runs compile fast.
+
+Shared blocks (zamba2): parameters created once under ``params["shared"]``,
+closed over inside the scan body (loop-invariant), invoked wherever the unit
+references their ``shared_id``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.blocks import BlockCfg
+from repro.models.layers import ParamCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    vocab: int
+    unit: tuple[BlockCfg, ...]
+    n_repeats: int
+    prologue: tuple[BlockCfg, ...] = ()
+    epilogue: tuple[BlockCfg, ...] = ()
+    shared: tuple[BlockCfg, ...] = ()
+    input_kind: str = "tokens"          # "tokens" | "embeddings" | "mixed"
+    n_prefix: int = 0                   # mixed: image/audio prefix length
+    max_seq: int = 8192
+    remat: str = "unit"                 # "none" | "unit"
+    attn_chunk: int = 1024
+    logit_softcap: float | None = None
+    # scan_layers=False python-loops the unit repeats instead of lax.scan.
+    # Production uses scan (O(1) HLO); the cost-faithful dry-run uses the
+    # loop mode because XLA's cost_analysis counts while bodies ONCE
+    # (see launch/dryrun.py --costmode and EXPERIMENTS.md §Roofline).
+    scan_layers: bool = True
+
+    @property
+    def n_layers(self) -> int:
+        return (
+            len(self.prologue)
+            + len(self.unit) * self.n_repeats
+            + len(self.epilogue)
+        )
+
+
+def model_init(ctx: ParamCtx, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    params: dict = {
+        "embed": L.embed_init(ctx, cfg.vocab, d),
+        "final_ln": L.rmsnorm_init(ctx, d),
+    }
+    if cfg.prologue:
+        params["prologue"] = [B.block_init(ctx, d, b) for b in cfg.prologue]
+    params["unit"] = [
+        ctx.stacked(cfg.n_repeats, functools.partial(B.block_init, d_model=d, blk=b))
+        for b in cfg.unit
+    ]
+    if cfg.epilogue:
+        params["epilogue"] = [B.block_init(ctx, d, b) for b in cfg.epilogue]
+    if cfg.shared:
+        params["shared"] = [B.block_init(ctx, d, b) for b in cfg.shared]
+    return params
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return model_init(ParamCtx("init", key, dtype), cfg)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return model_init(ParamCtx("abstract", dtype=dtype), cfg)
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    return model_init(ParamCtx("axes"), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill).
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params: dict, cfg: ModelConfig, inputs: dict, dtype) -> jax.Array:
+    d = cfg.d_model
+    scale = math.sqrt(d)
+    if cfg.input_kind == "tokens":
+        return L.embed_lookup(params["embed"], inputs["tokens"], dtype) * scale
+    if cfg.input_kind == "embeddings":
+        # audio/vision backbone-only: the modality frontend is a stub; the
+        # harness provides precomputed frame/patch embeddings (brief §shapes).
+        return inputs["embeddings"].astype(dtype)
+    if cfg.input_kind == "mixed":
+        txt = L.embed_lookup(params["embed"], inputs["tokens"], dtype) * scale
+        return jnp.concatenate([inputs["prefix_embeddings"].astype(dtype), txt], axis=1)
+    raise ValueError(cfg.input_kind)
+
+
+def _apply_block_by_ref(params_blk, blk: BlockCfg, shared_params, x, positions, chunk):
+    if blk.shared_id is not None:
+        return B.block_apply(
+            shared_params[blk.shared_id], blk, x, positions=positions, chunk=chunk
+        )
+    return B.block_apply(params_blk, blk, x, positions=positions, chunk=chunk)
+
+
+def forward(
+    params: dict, cfg: ModelConfig, inputs: dict, compute_dtype=jnp.bfloat16
+) -> tuple[jax.Array, dict]:
+    """-> (logits (B, T, vocab) fp32, aux losses)."""
+    h = _embed_inputs(params, cfg, inputs, compute_dtype)
+    T = h.shape[1]
+    positions = jnp.arange(T)[None, :]
+    shared = params.get("shared", [])
+    aux_total: dict = {}
+
+    def add_aux(aux):
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+
+    for p_blk, blk in zip(params.get("prologue", []), cfg.prologue):
+        h, aux = B.block_apply(p_blk, blk, h, positions=positions, chunk=cfg.attn_chunk)
+        add_aux(aux)
+
+    def unit_body(h_carry, rep_params):
+        aux_rep: dict = {}
+        for i, blk in enumerate(cfg.unit):
+            h_carry, aux = _apply_block_by_ref(
+                rep_params[i], blk, shared, h_carry, positions, cfg.attn_chunk
+            )
+            for k, v in aux.items():
+                aux_rep[k] = aux_rep.get(k, 0.0) + v
+        # pad aux to a fixed structure for scan
+        keys = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+        aux_vec = jnp.stack([jnp.asarray(aux_rep.get(k, 0.0), jnp.float32) for k in keys])
+        return h_carry, aux_vec
+
+    body = unit_body
+    if cfg.remat == "unit":
+        body = jax.checkpoint(unit_body, prevent_cse=False)
+    if cfg.scan_layers:
+        h, aux_vecs = jax.lax.scan(body, h, params["unit"])
+    else:
+        vecs = []
+        for r in range(cfg.n_repeats):
+            rep = jax.tree.map(lambda a: a[r], params["unit"])
+            h, av = body(h, rep)
+            vecs.append(av)
+        aux_vecs = jnp.stack(vecs)
+    for i, k in enumerate(("moe_lb_loss", "moe_z_loss", "moe_drop_frac")):
+        s = aux_vecs[:, i].sum()
+        add_aux({k: s})
+
+    for p_blk, blk in zip(params.get("epilogue", []), cfg.epilogue):
+        h, aux = B.block_apply(p_blk, blk, h, positions=positions, chunk=cfg.attn_chunk)
+        add_aux(aux)
+
+    h = L.rmsnorm(params["final_ln"], h)
+    logits = L.unembed_logits(params["embed"], h)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits, aux_total
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    compute_dtype=jnp.bfloat16,
+    aux_weight: float = 0.01,
+) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE aux). ``batch['labels']`` aligns with
+    the *token* positions (prefix positions carry label -100 = masked)."""
+    logits, aux = forward(params, cfg, batch, compute_dtype)
+    labels = batch["labels"]
+    if cfg.input_kind == "mixed":
+        pad = jnp.full(labels.shape[:1] + (cfg.n_prefix,), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.clip(labels, 0, cfg.vocab - 1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_c[..., None], axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"loss": loss, "ntokens": mask.sum()}
+    total = loss
+    for k in ("moe_lb_loss", "moe_z_loss"):
+        if k in aux:
+            total = total + aux_weight * aux[k]
+            metrics[k] = aux[k]
+    if "moe_drop_frac" in aux:
+        metrics["moe_drop_frac"] = aux["moe_drop_frac"]
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving).
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    caches: dict = {}
+    if cfg.prologue:
+        caches["prologue"] = [
+            B.block_init_cache(b, batch, max_seq, dtype) for b in cfg.prologue
+        ]
+    unit_caches = []
+    for blk in cfg.unit:
+        one = B.block_init_cache(blk, batch, max_seq, dtype)
+        unit_caches.append(
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape).copy()
+                if hasattr(a, "shape")
+                else a,
+                one,
+            )
+        )
+    caches["unit"] = unit_caches
+    if cfg.epilogue:
+        caches["epilogue"] = [
+            B.block_init_cache(b, batch, max_seq, dtype) for b in cfg.epilogue
+        ]
+    return caches
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    inputs: dict,
+    max_seq: int,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    """Inference prefill: full-sequence forward that also fills the decode
+    caches (the ``prefill_32k`` workload). Returns (logits, caches)."""
+    h = _embed_inputs(params, cfg, inputs, compute_dtype)
+    T = h.shape[1]
+    positions = jnp.arange(T)[None, :]
+    shared = params.get("shared", [])
+    caches: dict = {}
+
+    if cfg.prologue:
+        pcs = []
+        for p_blk, blk in zip(params["prologue"], cfg.prologue):
+            h, c = B.block_prefill(
+                p_blk, blk, h, positions=positions, max_seq=max_seq,
+                chunk=cfg.attn_chunk,
+            )
+            pcs.append(c)
+        caches["prologue"] = pcs
+
+    def unit_body(h_carry, rep_params):
+        new_caches = []
+        for i, blk in enumerate(cfg.unit):
+            p = shared[blk.shared_id] if blk.shared_id is not None else rep_params[i]
+            h_carry, c = B.block_prefill(
+                p, blk, h_carry, positions=positions, max_seq=max_seq,
+                chunk=cfg.attn_chunk,
+            )
+            new_caches.append(c)
+        return h_carry, new_caches
+
+    if cfg.scan_layers:
+        h, unit_caches = jax.lax.scan(unit_body, h, params["unit"])
+    else:
+        reps = []
+        for r in range(cfg.n_repeats):
+            rep = jax.tree.map(lambda a: a[r], params["unit"])
+            h, cs = unit_body(h, rep)
+            reps.append(cs)
+        unit_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    caches["unit"] = unit_caches
+
+    if cfg.epilogue:
+        ecs = []
+        for p_blk, blk in zip(params["epilogue"], cfg.epilogue):
+            h, c = B.block_prefill(
+                p_blk, blk, h, positions=positions, max_seq=max_seq,
+                chunk=cfg.attn_chunk,
+            )
+            ecs.append(c)
+        caches["epilogue"] = ecs
+
+    h = L.rmsnorm(params["final_ln"], h)
+    logits = L.unembed_logits(params["embed"], h)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits, caches
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    """Logical-axes tree mirroring :func:`init_caches` (stacked unit caches
+    get a leading 'layers' axis)."""
+    from repro.models.layers import Axes
+
+    axes: dict = {}
+    if cfg.prologue:
+        axes["prologue"] = [B.block_cache_axes(b) for b in cfg.prologue]
+    axes["unit"] = [
+        jax.tree.map(
+            lambda a: Axes(("layers",) + a.names),
+            B.block_cache_axes(b),
+            is_leaf=lambda x: isinstance(x, Axes),
+        )
+        for b in cfg.unit
+    ]
+    if cfg.epilogue:
+        axes["epilogue"] = [B.block_cache_axes(b) for b in cfg.epilogue]
+    return axes
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_seq, dtype))
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,           # (B, 1) int32 (or (B,1,d) embeddings)
+    caches: dict,
+    pos: jax.Array,              # (B,)
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    """One decode step for the whole model -> (logits (B, vocab), caches)."""
+    d = cfg.d_model
+    if cfg.input_kind == "tokens" or cfg.input_kind == "mixed":
+        h = L.embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(d)
+    else:
+        h = tokens.astype(compute_dtype)
+        if h.ndim == 2:  # allow (B, d)
+            h = h[:, None]
+    shared = params.get("shared", [])
+    new_caches: dict = {}
+
+    if cfg.prologue:
+        ncs = []
+        for p_blk, blk, c in zip(params["prologue"], cfg.prologue, caches["prologue"]):
+            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos)
+            ncs.append(c2)
+        new_caches["prologue"] = ncs
+
+    def unit_body(carry, xs):
+        h_c = carry
+        rep_params, rep_caches = xs
+        new_rep = []
+        for i, blk in enumerate(cfg.unit):
+            p = shared[blk.shared_id] if blk.shared_id is not None else rep_params[i]
+            h_c, c2 = B.block_decode_step(p, blk, h_c, rep_caches[i], pos)
+            new_rep.append(c2)
+        return h_c, new_rep
+
+    if cfg.scan_layers:
+        h, new_unit = jax.lax.scan(unit_body, h, (params["unit"], caches["unit"]))
+    else:
+        reps = []
+        for r in range(cfg.n_repeats):
+            rep_p = jax.tree.map(lambda a: a[r], params["unit"])
+            rep_c = jax.tree.map(lambda a: a[r], caches["unit"])
+            h, nc = unit_body(h, (rep_p, rep_c))
+            reps.append(nc)
+        new_unit = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    new_caches["unit"] = new_unit
+
+    if cfg.epilogue:
+        ncs = []
+        for p_blk, blk, c in zip(params["epilogue"], cfg.epilogue, caches["epilogue"]):
+            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos)
+            ncs.append(c2)
+        new_caches["epilogue"] = ncs
+
+    h = L.rmsnorm(params["final_ln"], h)
+    logits = L.unembed_logits(params["embed"], h)[:, 0]
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits, new_caches

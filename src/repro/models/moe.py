@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN (OLMoE, DeepSeek-V2-Lite) with expert parallelism.
+
+Token-choice top-k routing with a capacity factor, dispatch/combine as
+one-hot einsums (MXU-native, the standard TPU MoE formulation — a gather-based
+dispatch would serialise on sparse cores). Experts shard over the ``model``
+mesh axis (EP); with 64 experts on a 16-way axis that is 4 experts/device.
+
+Aux losses: load-balance (Switch-style) + router z-loss, returned for the
+training objective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamCtx
+
+
+def _maybe_constrain(x, *axes):
+    """with_sharding_constraint if the ambient mesh has the named axes
+    (no-op on host/test meshes). Critical for MoE under DP: without a
+    (experts->model, capacity->data) constraint on the dispatched slots,
+    GSPMD replicates the whole expert computation across the data axis —
+    measured 16x FLOP waste (EXPERIMENTS.md SecPerf iteration 7)."""
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty or not all(a is None or a in m.shape for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*axes))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                   # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0           # DeepSeek shared experts (always-on)
+    capacity_factor: float = 1.25
+    gated: bool = True          # SwiGLU experts
+    # "scatter": O(S·d) scatter/gather dispatch (production default).
+    # "einsum": classic one-hot dispatch — O(S²·d/E) because cap ∝ S; kept
+    # as the §Perf baseline it was replaced by (see EXPERIMENTS.md).
+    dispatch: str = "scatter"
+
+
+def moe_init(ctx: ParamCtx, cfg: MoEConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": ctx.make((d, e), ("embed", "experts"), scale=0.02),
+        "wi": ctx.make((e, d, f), ("experts", "embed", "ffn")),
+        "wo": ctx.make((e, f, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.gated:
+        p["wg"] = ctx.make((e, d, f), ("experts", "embed", "ffn"))
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["shared_wi"] = ctx.make((d, fs), ("embed", "ffn"))
+        p["shared_wg"] = ctx.make((d, fs), ("embed", "ffn"))
+        p["shared_wo"] = ctx.make((fs, d), ("ffn", "embed"))
+    return p
+
+
+def _expert_ffn(p: dict, xe: jax.Array, gated: bool) -> jax.Array:
+    """xe: (E, C, d) -> (E, C, d) through each expert's (Sw)iGLU FFN."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(xe.dtype))
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(xe.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xe.dtype))
+
+
+def moe_forward(
+    params: dict, cfg: MoEConfig, x: jax.Array
+) -> tuple[jax.Array, dict]:
+    """x: (B, T, d) -> (y, aux) with einsum dispatch/combine."""
+    B, T, d = x.shape
+    S = B * T
+    xf = x.reshape(S, d)
+    logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (S, E)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)             # (S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    E = cfg.n_experts
+    cap = int(max(cfg.top_k, cfg.capacity_factor * S * cfg.top_k / E))
+    # position of each (token, choice) in its expert's queue
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)         # (S, k, E)
+    flat = onehot.reshape(S * cfg.top_k, E)
+    pos_in_e = (jnp.cumsum(flat, axis=0) - flat).reshape(S, cfg.top_k, E)
+    pos = (pos_in_e * onehot).sum(-1)                          # (S, k)
+    keep = pos < cap
+
+    if cfg.dispatch == "scatter":
+        # O(S·k·d) data movement: scatter tokens into (E, cap, d) slots,
+        # gather them back weighted — no S x (E·cap) contraction.
+        slot = jnp.where(keep, top_e * cap + pos, E * cap)     # drop -> OOB
+        xe = jnp.zeros((E * cap + 1, d), xf.dtype).at[
+            slot.reshape(-1)
+        ].add(jnp.repeat(xf, cfg.top_k, axis=0))
+        xe = xe[:-1].reshape(E, cap, d)
+        # NOTE (EXPERIMENTS.md SecPerf iteration 7, refuted): forcing an
+        # (experts->model, cap->data) constraint here doubles collective
+        # traffic without de-replicating the expert einsums — GSPMD's
+        # scatter partitioning is the blocker. The production fix is a
+        # shard_map-local dispatch (per-shard top-k + all-to-all), logged
+        # as the next step.
+        ye = _expert_ffn(params, xe, cfg.gated)                # (E, cap, d)
+        gathered = ye.reshape(E * cap, d)[
+            jnp.clip(slot, 0, E * cap - 1).reshape(-1)
+        ].reshape(S, cfg.top_k, d)
+        w = (top_p.astype(xf.dtype) * keep.astype(xf.dtype))[..., None]
+        y = (gathered * w).sum(axis=1)
+    else:  # einsum baseline (paper-era TPU MoE; O(S²) — see EXPERIMENTS.md)
+        disp = (
+            jax.nn.one_hot(top_e, E, dtype=xf.dtype)[..., None]
+            * jax.nn.one_hot(pos, cap, dtype=xf.dtype)[..., None, :]
+            * keep[..., None, None].astype(xf.dtype)
+        )                                                      # (S, k, E, cap)
+        disp_tok = disp.sum(1)                                 # (S, E, cap)
+        xe = jnp.einsum("sec,sd->ecd", disp_tok, xf)           # (E, cap, d)
+        ye = _expert_ffn(params, xe, cfg.gated)                # (E, cap, d)
+        comb = (disp * top_p[..., None, None].astype(xf.dtype)).sum(1)
+        y = jnp.einsum("sec,ecd->sd", comb, ye)
+
+    if cfg.n_shared:
+        h = xf @ params["shared_wi"].astype(xf.dtype)
+        g = xf @ params["shared_wg"].astype(xf.dtype)
+        y = y + (jax.nn.silu(g) * h) @ params["shared_wo"].astype(xf.dtype)
+
+    # aux losses (fp32)
+    me = probs.mean(0)                                          # (E,)
+    ce = jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32).mean(0)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    drop_frac = 1.0 - keep.astype(jnp.float32).mean()
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss, "moe_drop_frac": drop_frac}
+    return y.reshape(B, T, d), aux

@@ -1,0 +1,214 @@
+"""Mamba2 (SSD) blocks for zamba2 — chunked-parallel scan, TPU-friendly.
+
+The SSD (state-space duality) formulation splits the sequence into chunks:
+within a chunk the recurrence is computed as a masked quadratic form
+(MXU-friendly), and a short ``lax.scan`` carries the (H, N, P) state across
+chunks. Decode keeps an O(1) recurrent state — this is why zamba2/xlstm are
+the archs that run the ``long_500k`` cell (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_init(ctx: ParamCtx, cfg: Mamba2Config) -> dict:
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    proj_out = 2 * di + 2 * cfg.n_groups * cfg.d_state + H
+    return {
+        "in_proj": ctx.make((d, proj_out), ("embed", "ffn")),
+        "conv_w": ctx.make((cfg.conv_width, cfg.conv_dim), (None, "ffn"), scale=0.5),
+        "conv_b": ctx.make((cfg.conv_dim,), ("ffn",), init="zeros"),
+        "A_log": ctx.make((H,), ("heads",), init="ones"),
+        "D": ctx.make((H,), ("heads",), init="ones"),
+        "dt_bias": ctx.make((H,), ("heads",), init="zeros"),
+        "norm": ctx.make((di,), ("ffn",), init="ones"),
+        "out_proj": ctx.make((di, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, T, C) with width-W kernel (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(W)
+    )
+    return out + b.astype(x.dtype)
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk, return_final=False):
+    """SSD scan. xh: (B,T,H,P); Bm/Cm: (B,T,G,N); dt: (B,T,H); A: (H,) < 0.
+
+    Returns (B, T, H, P). Heads are grouped: H/G heads share each B/C group.
+    """
+    Bsz, T, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = T // chunk
+    Q = chunk
+
+    def r(t):  # (B, T, ...) -> (B, nc, Q, ...)
+        return t.reshape((Bsz, nc, Q) + t.shape[2:])
+
+    xh_c, B_c, C_c, dt_c = r(xh), r(Bm), r(Cm), r(dt)
+    a = dt_c * A.astype(dt.dtype)                        # (B,nc,Q,H) log-decay
+    cs = jnp.cumsum(a, axis=2)                           # cumulative in-chunk
+
+    # Intra-chunk (quadratic, masked): Y[i] += sum_{j<=i} C_i·B_j decay(j->i) dt_j x_j
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcign,bcjgn->bcijg", C_c, B_c)      # (B,nc,Qi,Qj,G)
+    CB = jnp.repeat(CB, rep, axis=-1)                    # -> heads
+    Ydiag = jnp.einsum(
+        "bcijh,bcijh,bcjh,bcjhp->bcihp",
+        CB.astype(jnp.float32), decay.astype(jnp.float32),
+        dt_c.astype(jnp.float32), xh_c.astype(jnp.float32),
+    )
+
+    # Chunk states: S_c = sum_j decay(j->end) dt_j B_j x_j^T  (B,nc,H,N,P)
+    dec_end = jnp.exp(cs[:, :, -1:, :] - cs)             # (B,nc,Q,H)
+    Bh = jnp.repeat(B_c, rep, axis=-2)                   # (B,nc,Q,H,N)
+    S = jnp.einsum(
+        "bcqh,bcqh,bcqhn,bcqhp->bchnp",
+        dec_end.astype(jnp.float32), dt_c.astype(jnp.float32),
+        Bh.astype(jnp.float32), xh_c.astype(jnp.float32),
+    )
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        S_prev = carry
+        S_c, dec = inp                                   # (B,H,N,P), (B,H)
+        S_new = S_c + dec[..., None, None] * S_prev
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    S_final, S_prevs = jax.lax.scan(
+        scan_fn, S0, (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    # Inter-chunk: Y[i] += C_i · exp(cs_i) · S_prev
+    Ch = jnp.repeat(C_c, rep, axis=-2)                   # (B,nc,Q,H,N)
+    Yoff = jnp.einsum(
+        "bcqhn,bcqh,bchnp->bcqhp",
+        Ch.astype(jnp.float32), jnp.exp(cs).astype(jnp.float32), S_prevs,
+    )
+    y = (Ydiag + Yoff).reshape(Bsz, T, H, P)
+    if return_final:
+        return y, S_final
+    return y
+
+
+def mamba2_forward(
+    params: dict, cfg: Mamba2Config, x: jax.Array, return_state: bool = False
+):
+    """x: (B, T, d_model) -> (B, T, d_model). T must be chunk-padded.
+    With ``return_state``, also returns the decode state (prefill)."""
+    B, T, _ = x.shape
+    di, H, P, G, N = cfg.d_inner, cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc_raw, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xs.reshape(B, T, H, P)
+    Bm = Bm.reshape(B, T, G, N)
+    Cm = Cm.reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(x.dtype))     # (B,T,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    chunk = min(cfg.chunk, T)
+    if return_state:
+        y, S_final = _ssd_chunked(xh, Bm, Cm, dt, A, chunk, return_final=True)
+        W = cfg.conv_width
+        conv_state = jnp.concatenate(
+            [jnp.zeros((B, max(0, W - 1 - T), cfg.conv_dim), x.dtype),
+             xbc_raw[:, max(0, T - (W - 1)):]], axis=1)
+    else:
+        y = _ssd_chunked(xh, Bm, Cm, dt, A, chunk)
+    y = y + (params["D"].astype(jnp.float32))[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, di).astype(x.dtype)
+    # gated RMSNorm (Mamba2's norm(z-gate) variant)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(
+        x.dtype
+    ) * params["norm"].astype(x.dtype)
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, {"ssm": S_final, "conv": conv_state}
+    return out
+
+
+# ------------------------------- decode ------------------------------------
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype),
+    }
+
+
+def mamba2_decode_step(
+    params: dict, cfg: Mamba2Config, x: jax.Array, state: dict
+) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d) one token; O(1) state update (the long_500k path)."""
+    B = x.shape[0]
+    di, H, P, G, N = cfg.d_inner, cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    # conv buffer update
+    buf = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)      # (B, W, C)
+    w = params["conv_w"].astype(x.dtype)
+    xbc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", buf, w) + params["conv_b"].astype(x.dtype)
+    )
+    new_conv = buf[:, 1:]
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                           # (B,H)
+    S = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bm, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, S)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(
+        x.dtype
+    ) * params["norm"].astype(x.dtype)
+    y = y @ params["out_proj"].astype(x.dtype)
+    return y[:, None], {"ssm": S, "conv": new_conv}

@@ -1,0 +1,360 @@
+"""xLSTM blocks (mLSTM + sLSTM) — arXiv:2405.04517.
+
+* mLSTM: matrix memory ``C : (dk, dv)`` per head with exponential gating and
+  max-stabiliser; implemented as a time-step ``lax.scan`` (baseline; the
+  chunked-parallel form is a §Perf optimisation — see EXPERIMENTS.md).
+* sLSTM: scalar memory with block-diagonal recurrent weights; inherently
+  sequential (scan).
+
+Both keep O(1) decode state, which is why xlstm-1.3b runs the ``long_500k``
+cell. The pool config specifies ``d_ff=0``: blocks carry their own
+projection factor (pf=2 gate/up-down) and there is no separate FFN sublayer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: int = 2
+    conv_width: int = 4
+    # mLSTM sequence algorithm: "recurrent" (baseline: lax.scan over time,
+    # moves the (D,D) matrix state every step) or "chunked" (chunkwise
+    # parallel: quadratic intra-chunk + one state update per chunk — the
+    # §Perf hillclimb optimisation; state traffic drops by ~chunk x).
+    mlstm_impl: str = "recurrent"
+    chunk: int = 64
+    # cost-faithful dry-run: unroll the chunk scan so XLA's cost_analysis
+    # (which counts while bodies once) sees every chunk (launch/dryrun.py)
+    scan_unroll: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.proj_factor * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ------------------------------- mLSTM --------------------------------------
+
+
+def mlstm_init(ctx: ParamCtx, cfg: XLSTMConfig) -> dict:
+    d, di, H, hd = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.head_dim
+    return {
+        "up": ctx.make((d, 2 * di), ("embed", "ffn")),
+        "conv_w": ctx.make((cfg.conv_width, di), (None, "ffn"), scale=0.5),
+        "conv_b": ctx.make((di,), ("ffn",), init="zeros"),
+        "wq": ctx.make((di, di), ("ffn", "heads")),
+        "wk": ctx.make((di, di), ("ffn", "heads")),
+        "wv": ctx.make((di, di), ("ffn", "heads")),
+        "w_i": ctx.make((di, H), ("ffn", "heads"), scale=0.02),
+        "w_f": ctx.make((di, H), ("ffn", "heads"), scale=0.02),
+        "b_i": ctx.make((H,), ("heads",), init="zeros"),
+        "b_f": ctx.make((H,), ("heads",), init="ones"),
+        "norm": ctx.make((di,), ("ffn",), init="ones"),
+        "down": ctx.make((di, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(W))
+    return out + b.astype(x.dtype)
+
+
+def _mlstm_core(q, k, v, i_pre, f_pre):
+    """Stabilised recurrent mLSTM. q,k,v: (B,T,H,D); gates: (B,T,H) pre-act.
+
+    C_t = f C_{t-1} + i v k^T ; n_t = f n + i k ; y = C^T q / max(|n·q|, 1).
+    Stabiliser m_t = max(log f + m_{t-1}, log i) keeps exp() bounded.
+    """
+    B, T, H, D = q.shape
+    scale = D ** -0.5
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp                      # (B,H,D)x3, (B,H)x2
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(logf + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = f_[..., None] * n + i_[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt * scale)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt * scale)), jnp.exp(-m_new)
+        )
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        i_pre.transpose(1, 0, 2).astype(jnp.float32),
+        f_pre.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    carry, ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return ys.transpose(1, 0, 2, 3), carry            # (B,T,H,D), final state
+
+
+def _mlstm_core_chunked(q, k, v, i_pre, f_pre, chunk: int, unroll: bool = False):
+    """Chunkwise-parallel stabilised mLSTM (the §Perf optimisation).
+
+    Identical math to :func:`_mlstm_core` — the exponential-gated linear
+    recurrence unrolls to ``y_i ∝ Σ_l exp(F_i - F_l + b_l - m_i) (q_i·k_l) v_l``
+    — but evaluated per chunk: a masked quadratic intra-chunk term (MXU) plus
+    ONE (D, D) state read/write per chunk instead of per step, cutting the
+    state HBM traffic by ~chunk x. Stabiliser ``m`` follows the same
+    running-max semantics at chunk granularity.
+    """
+    B, T, H, D = q.shape
+    scale = D ** -0.5
+    nc = T // chunk
+    Q_ = chunk
+
+    def r(t):
+        return t.reshape((B, nc, Q_) + t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qc = r(q).astype(jnp.float32) * scale       # (nc, B, Q, H, D)
+    kc = r(k).astype(jnp.float32)
+    vc = r(v).astype(jnp.float32)
+    a = jax.nn.log_sigmoid(r(f_pre).astype(jnp.float32))   # (nc, B, Q, H)
+    b = r(i_pre).astype(jnp.float32)
+    F = jnp.cumsum(a, axis=2)                   # in-chunk cumulative log-forget
+    F_total = F[:, :, -1, :]                    # (nc, B, H)
+
+    # intra-chunk log-weights W[i, l] = F_i - F_l + b_l  (l <= i)
+    logw = F[:, :, :, None, :] - F[:, :, None, :, :] + b[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q_, Q_), bool))
+    logw = jnp.where(tri[None, None, :, :, None], logw, -jnp.inf)
+    m_intra = logw.max(axis=3)                  # (nc, B, Q, H)
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry                   # (B,H,D,D), (B,H,D), (B,H)
+        qb, kb, vb, ab, bb, Fb, Ft, lw, mi = inp
+        # combined stabiliser: running max across chunks
+        m_i = jnp.maximum(m_p[:, None, :] + Fb, mi)        # (B, Q, H)
+        # intra: softmax-like masked quadratic
+        w = jnp.exp(lw - m_i[:, :, None, :])               # (B, Qi, Ql, H)
+        s = jnp.einsum("bihd,blhd->bilh", qb, kb)
+        y_intra = jnp.einsum("bilh,bilh,blhd->bihd", s, w, vb)
+        n_intra = jnp.einsum("bilh,blhd->bihd", w, kb)
+        # inter: previous state scaled into the new stabiliser frame
+        dec_i = jnp.exp(m_p[:, None, :] + Fb - m_i)        # (B, Q, H)
+        y_inter = jnp.einsum("bihd,bhde->bihe", qb, C_p) * dec_i[..., None]
+        n_inter = jnp.einsum("bihd,bhd->bih", qb, n_p) * dec_i
+        num = y_intra + y_inter
+        den_dot = jnp.einsum("bihd,bihd->bih", qb, n_intra) + n_inter
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_i))
+        y = num / den[..., None]
+        # state update to end-of-chunk
+        m_new = jnp.maximum(m_p + Ft, (Ft[:, None] - Fb + bb).max(axis=1))
+        dec_l = jnp.exp(Ft[:, None, :] - Fb + bb - m_new[:, None, :])  # (B,Q,H)
+        C_new = jnp.exp(m_p + Ft - m_new)[..., None, None] * C_p + jnp.einsum(
+            "blh,blhd,blhe->bhde", dec_l, kb, vb
+        )
+        n_new = jnp.exp(m_p + Ft - m_new)[..., None] * n_p + jnp.einsum(
+            "blh,blhd->bhd", dec_l, kb
+        )
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    carry, ys = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, a, b, F, F_total, logw, m_intra),
+        unroll=nc if unroll else 1,
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, D)
+    return y, carry
+
+
+def mlstm_forward(
+    params: dict, cfg: XLSTMConfig, x: jax.Array, return_state: bool = False
+):
+    B, T, _ = x.shape
+    di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = x @ params["up"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, params["conv_w"], params["conv_b"]))
+    q = (xc @ params["wq"].astype(x.dtype)).reshape(B, T, H, hd)
+    k = (xc @ params["wk"].astype(x.dtype)).reshape(B, T, H, hd)
+    v = (xm @ params["wv"].astype(x.dtype)).reshape(B, T, H, hd)
+    i_pre = xc @ params["w_i"].astype(x.dtype) + params["b_i"].astype(x.dtype)
+    f_pre = xc @ params["w_f"].astype(x.dtype) + params["b_f"].astype(x.dtype)
+    if cfg.mlstm_impl == "chunked" and T % cfg.chunk == 0 and T > cfg.chunk:
+        yh, (Cf, nf, mf) = _mlstm_core_chunked(
+            q, k, v, i_pre, f_pre, cfg.chunk, unroll=cfg.scan_unroll)
+    else:
+        yh, (Cf, nf, mf) = _mlstm_core(q, k, v, i_pre, f_pre)
+    y = yh.reshape(B, T, di).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(
+        x.dtype
+    ) * params["norm"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["down"].astype(x.dtype)
+    if return_state:
+        W = cfg.conv_width
+        conv_state = jnp.concatenate(
+            [jnp.zeros((B, max(0, W - 1 - T), di), x.dtype),
+             xm[:, max(0, T - (W - 1)):]], axis=1)
+        return out, {"C": Cf, "n": nf, "m": mf, "conv": conv_state}
+    return out
+
+
+def mlstm_init_state(cfg: XLSTMConfig, batch: int, dtype=jnp.float32) -> dict:
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+    }
+
+
+def mlstm_decode_step(params, cfg: XLSTMConfig, x, state):
+    """x: (B, 1, d) -> O(1) state update."""
+    B = x.shape[0]
+    di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = x[:, 0] @ params["up"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    buf = jnp.concatenate([state["conv"], xm[:, None]], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", buf, params["conv_w"].astype(x.dtype))
+        + params["conv_b"].astype(x.dtype)
+    )
+    q = (xc @ params["wq"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    k = (xc @ params["wk"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    v = (xm @ params["wv"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    it = (xc @ params["w_i"].astype(x.dtype) + params["b_i"].astype(x.dtype)).astype(jnp.float32)
+    ft = (xc @ params["w_f"].astype(x.dtype) + params["b_f"].astype(x.dtype)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state["m"], it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(logf + state["m"] - m_new)
+    C = f_[..., None, None] * state["C"] + i_[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_[..., None] * state["n"] + i_[..., None] * k
+    scale = hd ** -0.5
+    num = jnp.einsum("bhkv,bhk->bhv", C, q * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q * scale)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, di).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(
+        x.dtype
+    ) * params["norm"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = y @ params["down"].astype(x.dtype)
+    return y[:, None], {"C": C, "n": n, "m": m_new, "conv": buf[:, 1:]}
+
+
+# ------------------------------- sLSTM --------------------------------------
+
+
+def slstm_init(ctx: ParamCtx, cfg: XLSTMConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    p = {"norm": ctx.make((d,), ("embed",), init="ones")}
+    for g in ("z", "i", "f", "o"):
+        p[f"w_{g}"] = ctx.make((d, d), ("embed", "heads"), scale=0.02)
+        p[f"r_{g}"] = ctx.make((H, hd, hd), ("heads", None, None), scale=0.02)
+        p[f"b_{g}"] = ctx.make((d,), ("heads",), init="ones" if g == "f" else "zeros")
+    return p
+
+
+def slstm_forward(
+    params: dict, cfg: XLSTMConfig, x: jax.Array, return_state: bool = False
+):
+    """Scalar-memory LSTM with exponential gating; scan over time."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    wz = jnp.stack([params[f"w_{g}"] for g in "zifo"]).astype(x.dtype)
+    bz = jnp.stack([params[f"b_{g}"] for g in "zifo"]).astype(jnp.float32)
+    rz = jnp.stack([params[f"r_{g}"] for g in "zifo"]).astype(jnp.float32)
+    pre = jnp.einsum("btd,gde->btge", x, wz).astype(jnp.float32) + bz[None, None]
+
+    def step(carry, inp):
+        c, n, h, m = carry                            # (B,H,hd) x3, (B,H,hd)
+        pre_t = inp                                   # (B, 4, d)
+        rec = jnp.einsum("bhe,ghef->bghf", h, rz)     # (B,4,H,hd)
+        tot = pre_t.reshape(B, 4, H, hd) + rec
+        zt = jnp.tanh(tot[:, 0])
+        it = tot[:, 1]
+        ft = jax.nn.log_sigmoid(tot[:, 2])
+        ot = jax.nn.sigmoid(tot[:, 3])
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        c_new = f_ * c + i_ * zt
+        n_new = f_ * n + i_
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    zero = jnp.zeros((B, H, hd), jnp.float32)
+    (cf, nf, hf, mf), hs = jax.lax.scan(
+        step, (zero, zero, zero, zero), pre.transpose(1, 0, 2, 3)
+    )
+    y = hs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(
+        x.dtype
+    ) * params["norm"].astype(x.dtype)
+    if return_state:
+        return y, {"c": cf, "n": nf, "h": hf, "m": mf}
+    return y
+
+
+def slstm_init_state(cfg: XLSTMConfig, batch: int, dtype=jnp.float32) -> dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    zero = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero, "m": zero}
+
+
+def slstm_decode_step(params, cfg: XLSTMConfig, x, state):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    wz = jnp.stack([params[f"w_{g}"] for g in "zifo"]).astype(x.dtype)
+    bz = jnp.stack([params[f"b_{g}"] for g in "zifo"]).astype(jnp.float32)
+    rz = jnp.stack([params[f"r_{g}"] for g in "zifo"]).astype(jnp.float32)
+    pre = jnp.einsum("bd,gde->bge", x[:, 0], wz).astype(jnp.float32) + bz[None]
+    rec = jnp.einsum("bhe,ghef->bghf", state["h"], rz)
+    tot = pre.reshape(B, 4, H, hd) + rec
+    zt = jnp.tanh(tot[:, 0])
+    it = tot[:, 1]
+    ft = jax.nn.log_sigmoid(tot[:, 2])
+    ot = jax.nn.sigmoid(tot[:, 3])
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + state["m"] - m_new)
+    c_new = f_ * state["c"] + i_ * zt
+    n_new = f_ * state["n"] + i_
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    y = h_new.reshape(B, d).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(
+        x.dtype
+    ) * params["norm"].astype(x.dtype)
+    return y[:, None], {"c": c_new, "n": n_new, "h": h_new, "m": m_new}

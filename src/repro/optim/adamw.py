@@ -1,0 +1,110 @@
+"""AdamW + schedules + global-norm clipping (hand-built; no optax here).
+
+State layout is a pytree congruent with params, so the sharding rules apply
+to optimizer state verbatim (m/v inherit the param's PartitionSpec) — this
+is what makes the optimizer ZeRO-free but fully sharded under TP and cheap
+under DP (state is replicated only where params are).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"    # "cosine" | "linear" | "constant"
+    # Mixed-precision training: keep compute params in bf16 and an fp32
+    # MASTER copy in the optimizer state (ZeRO-sharded with m/v). Halves the
+    # param + gradient HBM footprint (EXPERIMENTS.md §Perf iteration 2:
+    # qwen1.5-32b train_4k 19.4 GB -> fits).
+    master_weights: bool = False
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip(
+            (s - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+            0.0, 1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t)
+            )
+        else:
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * (1 - t)
+    return cfg.lr * warm * decay
+
+
+def init_state(params, master_weights: bool = False) -> dict:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+    if master_weights:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32) if hasattr(p, "astype")
+            else jnp.zeros(p.shape, jnp.float32),
+            params,
+        )
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(
+    params, grads, state: dict, cfg: AdamWConfig
+) -> tuple[dict, dict, dict]:
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p_ref, g, m, v):
+        """p_ref is the fp32 master when enabled, else the param itself."""
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        p32 = p_ref.astype(jnp.float32)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p32
+        return p32 - lr * delta, m_new, v_new
+
+    ref = state["master"] if cfg.master_weights else params
+    out = jax.tree.map(upd, ref, grads, state["m"], state["v"])
+    new_ref = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if cfg.master_weights:
+        new_state["master"] = new_ref
+        new_params = jax.tree.map(
+            lambda master, p: master.astype(p.dtype), new_ref, params
+        )
+    else:
+        new_params = jax.tree.map(
+            lambda r, p: r.astype(p.dtype), new_ref, params
+        )
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,93 @@
+"""Batched serving engine: prefill + decode with KV caches.
+
+The engine jits one ``prefill`` and one ``decode_step`` per (batch, seq)
+bucket and runs greedy/temperature sampling. Continuous batching is modelled
+with per-slot positions: finished sequences keep decoding into a dead slot
+until the batch drains (the standard static-batch serving compromise; true
+continuous batching needs host-side slot swapping, which `serve_requests`
+implements at bucket granularity)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    eos_id: int = -1             # -1: never stops early
+    compute_dtype: str = "float32"
+
+
+class Engine:
+    def __init__(self, params, model_cfg, serve_cfg: ServeConfig):
+        self.params = params
+        self.model = model_cfg
+        self.cfg = serve_cfg
+        dt = jnp.dtype(serve_cfg.compute_dtype).type
+        self._dt = jnp.float32 if serve_cfg.compute_dtype == "float32" else jnp.bfloat16
+
+        self._prefill = jax.jit(
+            lambda p, inputs: lm.prefill(
+                p, self.model, inputs, self.cfg.max_seq, self._dt
+            )
+        )
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: lm.decode_step(
+                p, self.model, tok, caches, pos, self._dt
+            ),
+            donate_argnums=(2,),   # caches update in place
+        )
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature).astype(
+            jnp.int32
+        )
+
+    def generate(self, prompts: np.ndarray, seed: int = 0) -> np.ndarray:
+        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens) int32."""
+        B, T = prompts.shape
+        assert T + self.cfg.max_new_tokens <= self.cfg.max_seq
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        key = jax.random.PRNGKey(seed)
+        key, k0 = jax.random.split(key)
+        tok = self._sample(logits[:, T - 1], k0)[:, None]
+        out = [tok]
+        # synchronized decode (scalar position): collective-free cache writes
+        pos = jnp.asarray(T, jnp.int32)
+        for _ in range(self.cfg.max_new_tokens - 1):
+            lg, caches = self._decode(self.params, tok, caches, pos)
+            key, kt = jax.random.split(key)
+            tok = self._sample(lg, kt)[:, None]
+            out.append(tok)
+            pos = pos + 1
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def serve_requests(
+        self, requests: list[np.ndarray], batch_size: int = 8, seed: int = 0
+    ) -> list[np.ndarray]:
+        """Bucket requests to a fixed batch (pad with copies), drain bucket
+        by bucket — the batched-serving driver used by examples/serve_kan.py."""
+        results: list[np.ndarray] = []
+        for i in range(0, len(requests), batch_size):
+            bucket = requests[i : i + batch_size]
+            T = max(r.shape[0] for r in bucket)
+            padded = np.stack(
+                [np.pad(r, (T - r.shape[0], 0), constant_values=0) for r in bucket]
+            )
+            while padded.shape[0] < batch_size:
+                padded = np.concatenate([padded, padded[-1:]], axis=0)
+            gen = self.generate(padded.astype(np.int32), seed=seed + i)
+            results.extend(gen[: len(bucket)])
+        return results

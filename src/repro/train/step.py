@@ -1,0 +1,65 @@
+"""Training step: grad accumulation (scan), mixed precision, pjit-ready.
+
+``make_train_step`` returns a pure ``(params, opt_state, batch, step) ->
+(params, opt_state, metrics)`` function. Gradient accumulation is a
+``lax.scan`` over microbatches, so under DP the gradient all-reduce (inserted
+by GSPMD at the psum of the final update) overlaps the last microbatch's
+backward with XLA's latency-hiding scheduler (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import adamw
+from repro.dist import compression
+
+
+def make_train_step(
+    model_cfg,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    compute_dtype=jnp.bfloat16,
+    accum_steps: int = 1,
+    grad_compression: str | None = None,   # None | "int8" | "bf16"
+) -> Callable:
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, model_cfg, batch, compute_dtype)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (g0, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+        if grad_compression:
+            grads = compression.compress_tree(grads, grad_compression)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,126 @@
+"""Property + unit tests for the B-spline core (paper §II-A, §III-B)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bspline as bs
+from repro.core.bspline import SplineGrid
+
+GRIDS = [(5, 3), (3, 3), (10, 3), (2, 1), (3, 2), (4, 4), (7, 2)]
+
+
+def _x(n=128, lo=-1.0, hi=1.0, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).uniform(lo, hi, (n,)).astype(np.float32)
+    )
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_partition_of_unity(G, P):
+    """sum_m B_m(x) == 1 on the whole domain (incl. the endpoints)."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    x = jnp.concatenate([_x(), jnp.asarray([-1.0, 1.0, 0.0])])
+    dense = bs.cox_de_boor_dense(x, g)
+    np.testing.assert_allclose(np.asarray(dense.sum(-1)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_local_support_nm_sparsity(G, P):
+    """Paper §IV-A: at most N = P+1 of M = G+P values are non-zero, and they
+    are contiguous at positions k-P..k."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    x = _x(512)
+    dense = np.asarray(bs.cox_de_boor_dense(x, g))
+    k = np.asarray(bs.interval_index(x, g))
+    nz = dense > 1e-9
+    assert nz.sum(-1).max() <= P + 1
+    for m in range(g.n_basis):
+        rows = nz[:, m]
+        assert np.all((m >= k[rows] - P) & (m <= k[rows])), "non-contiguous support"
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_compact_matches_dense(G, P):
+    g = SplineGrid(-1.0, 1.0, G, P)
+    x = _x(256)
+    vals, k = bs.compact_basis(x, g)
+    dense = bs.compact_to_dense(vals, k, g)
+    ref = bs.cox_de_boor_dense(x, g)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_lut_matches_exact(G, P):
+    """Tabulated path (Fig. 5) converges to the exact values as S grows."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    x = _x(256)
+    ref = bs.cox_de_boor_dense(x, g)
+    for S, tol in [(256, 2e-2), (4096, 1.5e-3)]:
+        lut = jnp.asarray(bs.build_lut(P, S))
+        dense = bs.lut_basis_dense(x, g, lut)
+        assert float(jnp.abs(dense - ref).max()) < tol
+
+
+def test_cardinal_symmetry():
+    """B_{0,P}(t) == B_{0,P}(P+1-t) — the half-table property (§III-B)."""
+    for P in (1, 2, 3, 4):
+        t = jnp.linspace(0.0, P + 1.0, 257)
+        a = bs.cardinal_bspline(t, P)
+        b = bs.cardinal_bspline((P + 1.0) - t, P)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_translation_invariance_eq4():
+    """Paper Eq. 4: B_{t_k,P}(x) = B_{0,P}((x-t0)/delta - k)."""
+    g = SplineGrid(-2.0, 3.0, 6, 3)
+    x = _x(128, -2.0, 3.0)
+    dense = np.asarray(bs.cox_de_boor_dense(x, g))
+    z = np.asarray(bs.align(x, g))
+    for m in range(g.n_basis):
+        via_cardinal = np.asarray(bs.cardinal_bspline(jnp.asarray(z - m), 3))
+        np.testing.assert_allclose(dense[:, m], via_cardinal, atol=1e-5)
+
+
+@hypothesis.given(
+    G=st.integers(1, 12),
+    P=st.integers(1, 4),
+    lo=st.floats(-10, 0, allow_nan=False),
+    width=st.floats(0.5, 20, allow_nan=False),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_property_invariants(G, P, lo, width, seed):
+    """System invariants over random grids: partition of unity, N:M bound,
+    compact==dense, k in range."""
+    g = SplineGrid(lo, lo + width, G, P)
+    x = _x(64, lo, lo + width, seed=seed % 1000)
+    dense = bs.cox_de_boor_dense(x, g)
+    np.testing.assert_allclose(np.asarray(dense.sum(-1)), 1.0, atol=1e-4)
+    assert int((np.asarray(dense) > 1e-7).sum(-1).max()) <= P + 1
+    vals, k = bs.compact_basis(x, g)
+    assert int(k.min()) >= P and int(k.max()) <= G + P - 1
+    np.testing.assert_allclose(
+        np.asarray(bs.compact_to_dense(vals, k, g)), np.asarray(dense), atol=1e-4
+    )
+
+
+def test_grad_flows_through_dense():
+    g = SplineGrid(-1.0, 1.0, 5, 3)
+    c = jnp.asarray(np.random.RandomState(1).normal(size=(g.n_basis,)).astype(np.float32))
+    f = lambda x: (bs.cox_de_boor_dense(x, g) * c).sum()
+    got = jax.grad(f)(jnp.asarray(0.3))
+    eps = 1e-3
+    fd = (f(jnp.asarray(0.3 + eps)) - f(jnp.asarray(0.3 - eps))) / (2 * eps)
+    np.testing.assert_allclose(float(got), float(fd), rtol=1e-2)
+
+
+def test_out_of_domain_clamps():
+    g = SplineGrid(-1.0, 1.0, 5, 3)
+    x = jnp.asarray([-5.0, 5.0])
+    vals, k = bs.compact_basis(x, g)
+    assert int(k[0]) == g.P and int(k[1]) == g.n_basis - 1
+    assert bool(jnp.all(jnp.isfinite(vals)))

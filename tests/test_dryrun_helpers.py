@@ -1,0 +1,55 @@
+"""Unit tests for dry-run helpers that don't need 512 devices."""
+
+import importlib
+import sys
+import types
+
+import pytest
+
+
+def _load_collective_bytes():
+    """Import dryrun.collective_bytes without triggering the 512-device
+    XLA_FLAGS (the module sets os.environ at import; jax is already
+    initialised in this process, so the flag is inert here)."""
+    from repro.launch.dryrun import collective_bytes
+
+    return collective_bytes
+
+
+HLO = """
+ENTRY %main {
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8]
+  %ag = bf16[64,2048]{1,0} all-gather-start(%y), dimensions={1}
+  %agd = bf16[64,2048]{1,0} all-gather-done(%ag)
+  %rs = f32[256]{0} reduce-scatter(%z), dimensions={0}
+  %a2a = (s8[16,16]{1,0}, s8[16,16]{1,0}) all-to-all(%p, %q)
+  %cp = f32[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    collective_bytes = _load_collective_bytes()
+    out = collective_bytes(HLO)
+    assert out["all-reduce"] == 1024 * 512 * 4
+    assert out["all-gather"] == 64 * 2048 * 2      # -start only, no double count
+    assert out["reduce-scatter"] == 256 * 4
+    assert out["all-to-all"] == 2 * 16 * 16 * 1    # tuple: both elements
+    assert out["collective-permute"] == 8 * 8 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_accum_steps_policy():
+    from repro.launch.dryrun import _accum_steps
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # 256 global batch, seq 4096 -> 16 per dev -> microbatch 2 -> accum 8
+    assert _accum_steps(256, 4096, FakeMesh()) == 8
+
+    class FakeMeshMulti:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert _accum_steps(256, 4096, FakeMeshMulti()) == 4

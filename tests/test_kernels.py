@@ -1,0 +1,90 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (shape/dtype sweeps).
+
+All kernels run in interpret mode on CPU (the TPU target compiles the same
+code through Mosaic).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as q
+from repro.core.bspline import SplineGrid, build_lut
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (G, P, BS, K, N)
+    (5, 3, 64, 16, 32),
+    (5, 3, 100, 37, 50),     # ragged: exercises padding
+    (10, 3, 64, 20, 10),     # MNIST-KAN-like basis
+    (3, 2, 33, 5, 7),
+    (2, 1, 17, 3, 4),
+    (3, 3, 1, 22, 60),       # BS=1 decode-like
+]
+
+
+@pytest.mark.parametrize("G,P", [(5, 3), (10, 3), (3, 2), (2, 1)])
+@pytest.mark.parametrize("n", [64, 300, 1025])
+def test_bspline_lut_kernel(G, P, n):
+    g = SplineGrid(-1.0, 1.0, G, P)
+    x = jnp.asarray(np.random.RandomState(n).uniform(-1, 1, (n,)).astype(np.float32))
+    lut = jnp.asarray(build_lut(P, 256))
+    vals, k = ops.bspline_lut(x, lut, g, block=128, interpret=True)
+    rvals, rk = ref.ref_bspline_compact(x, g, lut)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=1e-6)
+
+
+@pytest.mark.parametrize("G,P,BS,K,N", SHAPES)
+def test_kan_fused_gemm_kernel(G, P, BS, K, N):
+    g = SplineGrid(-1.0, 1.0, G, P)
+    rs = np.random.RandomState(BS + K)
+    x = jnp.asarray(rs.uniform(-1, 1, (BS, K)).astype(np.float32))
+    coeff = jnp.asarray(rs.normal(size=(K, g.n_basis, N)).astype(np.float32))
+    y = ops.kan_fused_gemm(x, coeff, g, bb=32, bn=32, bk=8, interpret=True)
+    yr = ref.ref_kan_gemm(x, coeff, g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kan_fused_gemm_dtypes(dtype):
+    g = SplineGrid(-1.0, 1.0, 5, 3)
+    rs = np.random.RandomState(7)
+    x = jnp.asarray(rs.uniform(-1, 1, (64, 16)).astype(np.float32)).astype(dtype)
+    coeff = jnp.asarray(rs.normal(size=(16, g.n_basis, 32)).astype(np.float32)).astype(dtype)
+    y = ops.kan_fused_gemm(x, coeff, g, bb=32, bn=32, bk=8, interpret=True)
+    yr = ref.ref_kan_gemm(x.astype(jnp.float32), coeff.astype(jnp.float32), g)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(y, dtype=np.float32), np.asarray(yr), rtol=tol, atol=tol * 10
+    )
+
+
+@pytest.mark.parametrize("G,P,BS,K,N", SHAPES)
+def test_kan_int8_gemm_kernel_bit_exact(G, P, BS, K, N):
+    """The integer kernel must match the integer oracle *exactly*."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    rs = np.random.RandomState(BS * 7 + K)
+    x = jnp.asarray(rs.uniform(-1, 1, (BS, K)).astype(np.float32))
+    qg = q.QuantizedGrid.make(g)
+    xq = qg.x_quant.quantize(x)
+    lut8 = jnp.asarray(q.build_lut_u8(P, 256))
+    cq = jnp.asarray(rs.randint(-127, 128, (K, g.n_basis, N)).astype(np.int8))
+    y = ops.kan_int8_gemm(xq, lut8, cq, g, bb=32, bn=32, bk=8, interpret=True)
+    yr = ref.ref_kan_gemm_int8(xq, cq, lut8, g)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_fused_gemm_block_size_invariance():
+    """Result must not depend on the tiling (hardware-shape independence)."""
+    g = SplineGrid(-1.0, 1.0, 5, 3)
+    rs = np.random.RandomState(3)
+    x = jnp.asarray(rs.uniform(-1, 1, (70, 30)).astype(np.float32))
+    coeff = jnp.asarray(rs.normal(size=(30, g.n_basis, 40)).astype(np.float32))
+    outs = [
+        ops.kan_fused_gemm(x, coeff, g, bb=bb, bn=bn, bk=bk, interpret=True)
+        for (bb, bn, bk) in [(16, 16, 4), (32, 64, 8), (128, 128, 16)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-4)
