@@ -1,7 +1,20 @@
 """KAN GEMM datapaths (paper §III-A): dense-B baseline vs compact-N:M vs
 tabulated vs the fused Pallas kernel, with the HBM-byte accounting that
-motivates the fused design on TPU (B never hits HBM: traffic X+C+Y instead
-of X+B+C+Y, a (G+P)x cut of the activation stream)."""
+motivates the fused design on TPU (B never hits HBM: traffic X+C+Wb+Y
+instead of X+B+C+Wb+Y, a (G+P)x cut of the activation stream — DESIGN.md §2).
+
+On CPU the fused path runs in interpret mode, so its µs numbers measure the
+interpreter, not the hardware; the compiled-path costs are *modeled* via the
+HBM-traffic formula (interpret=False path modeled, interpret=True measured).
+The module also:
+
+* consults/records the tile autotuner (``repro.kernels.autotune``) on a
+  reduced probe shape and reports the chosen tiles;
+* counts ``pallas_call`` ops in the fused layer's jaxpr — proving the whole
+  layer (spline + base term) is ONE kernel launch;
+* exposes :func:`report` — the dict ``benchmarks/run.py`` writes to
+  ``BENCH_kan_paths.json`` so future PRs have a perf trajectory.
+"""
 
 import time
 
@@ -11,9 +24,14 @@ import numpy as np
 
 from repro.core import kan_layer as kl
 from repro.core.bspline import SplineGrid, build_lut
+from repro.kernels import autotune as tune
+from repro.kernels import ops as kops
+
+BS, K, N = 2048, 256, 256
+PROBE = (256, 64, 128)       # autotune probe shape (interpret mode is slow)
 
 
-def _bench(f, *args, iters=10):
+def _bench(f, *args, iters=3):
     out = f(*args)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
@@ -23,50 +41,142 @@ def _bench(f, *args, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def traffic_model(BS, K, N, grid: SplineGrid, fused: bool, dtype_bytes=4):
+def traffic_model(BS, K, N, grid: SplineGrid, path: str, dtype_bytes=4):
+    """Modeled HBM bytes per layer call (DESIGN.md §2).
+
+    ``fused`` reads x + coeff + base_w and writes y — the B panel and the
+    base-GEMM's second x read never exist.  The unfused paths add the dense
+    B panel (dense/lut) or the gathered coefficient slabs (compact), plus a
+    separate base GEMM's x re-read."""
     M = grid.n_basis
     x = BS * K
     b = BS * K * M
+    slabs = BS * K * grid.n_nonzero * N
     c = K * M * N
+    wb = K * N
     y = BS * N
-    total = (x + c + y) if fused else (x + b + c + y)
+    if path == "fused":
+        total = x + c + wb + y
+    elif path == "compact":
+        total = x + slabs + y + x + wb + y
+    else:  # dense / lut: materialised B panel + separate base GEMM
+        total = x + b + c + y + x + wb + y
     return total * dtype_bytes
 
 
-def run() -> list[tuple[str, float, str]]:
-    g = SplineGrid(-1.0, 1.0, 5, 3)
-    BS, K, N = 2048, 256, 256
+def _count_kernel_launches(fn, *args) -> int:
+    """pallas_call ops in the jaxpr — the one-kernel-per-layer proof."""
+    return str(jax.make_jaxpr(fn)(*args)).count("pallas_call")
+
+
+def _build(g, BS_, K_, N_):
     rs = np.random.RandomState(0)
-    x = jnp.asarray(rs.uniform(-1, 1, (BS, K)).astype(np.float32))
-    cfg = kl.KANLayerConfig(K, N, g)
-    params = kl.init_kan_layer(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rs.uniform(-1, 1, (BS_, K_)).astype(np.float32))
+    params = kl.init_kan_layer(
+        jax.random.PRNGKey(0), kl.KANLayerConfig(K_, N_, g)
+    )
+    return params, x
+
+
+def _autotune_probe(g) -> dict:
+    """Run the autotuner on the probe shape and return its report row."""
+    pb, pk, pn = PROBE
+    params, x = _build(g, pb, pk, pn)
+    cands = [(32, 64, 4), (32, 128, 8), (64, 64, 8), (64, 128, 16),
+             (128, 128, 8), (128, 128, 16)]
+    return tune.autotune(
+        "fused",
+        lambda bb, bn, bk: kops.kan_fused_gemm(
+            x, params["coeff"], g, base_w=params["base_w"],
+            bb=bb, bn=bn, bk=bk,
+        ),
+        pb, pk, pn, g.n_basis, dtype=x.dtype, iters=1, candidates=cands,
+    )
+
+
+def report() -> dict:
+    g = SplineGrid(-1.0, 1.0, 5, 3)
+    params, x = _build(g, BS, K, N)
     lut = jnp.asarray(build_lut(3, 256))
+    at = _autotune_probe(g)
+    # Tiles the MAIN-shape fused run actually uses (cache -> defaults ->
+    # heuristic); pinned explicitly so the report and the measurement agree.
+    main_tiles = tune.get_tiles("fused", BS, K, N, g.n_basis, x.dtype)
+
+    def fused_fn(p, x):
+        bb, bn, bk = main_tiles
+        return kops.kan_fused_gemm(
+            x, p["coeff"], g, base_w=p.get("base_w"), bb=bb, bn=bn, bk=bk
+        )
 
     fns = {
         "dense": jax.jit(lambda p, x: kl.kan_layer_apply(p, x, g, "dense")),
         "compact": jax.jit(lambda p, x: kl.kan_layer_apply(p, x, g, "compact")),
         "lut": jax.jit(lambda p, x: kl.kan_layer_apply(p, x, g, "lut", lut=lut)),
-        "fused_kernel": jax.jit(
-            lambda p, x: kl.kan_layer_apply(p, x, g, "fused")
-        ),
+        "fused_kernel": jax.jit(fused_fn),
     }
-    rows = []
+    backend = jax.default_backend()
+    out: dict = {
+        "shape": {"BS": BS, "K": K, "N": N, "G": g.G, "P": g.P},
+        "backend": backend,
+        "note": "fused µs are interpret-mode on non-TPU backends; "
+                "hbm_model_bytes models the compiled (interpret=False) path",
+        "autotune": {
+            "probe_key": at["key"],
+            "probe_tiles": list(at["tiles"]),
+            "probe_us": None if at["us"] != at["us"] else round(at["us"], 1),
+            "probe_candidates_us": at["candidates"],
+            "main_tiles": list(main_tiles),
+        },
+        "fused_kernel_launches_per_layer": _count_kernel_launches(
+            lambda: kl.kan_layer_apply(params, x, g, "fused")
+        ),
+        "paths": {},
+    }
     ref = None
     for name, f in fns.items():
         us = _bench(f, params, x)
-        out = f(params, x)
+        y = f(params, x)
         if ref is None:
-            ref = out
-        err = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max() + 1e-9))
-        hbm = traffic_model(BS, K, N, g, fused=(name == "fused_kernel"))
+            ref = y
+        err = float(jnp.abs(y - ref).max() / (jnp.abs(ref).max() + 1e-9))
+        path_kind = "fused" if name == "fused_kernel" else (
+            "compact" if name == "compact" else "dense"
+        )
+        out["paths"][name] = {
+            "us_per_call": round(us, 1),
+            "rel_err_vs_dense": err,
+            "hbm_model_bytes": traffic_model(BS, K, N, g, path_kind),
+        }
+    out["fused_hbm_cut_vs_dense"] = round(
+        traffic_model(BS, K, N, g, "dense") / traffic_model(BS, K, N, g, "fused"),
+        2,
+    )
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    rep = report()
+    rows = []
+    for name, row in rep["paths"].items():
         rows.append(
             (
                 f"kanpaths.{name}",
-                us,
-                f"rel_err={err:.1e};hbm_model_bytes={hbm:.3g};"
-                f"note={'interpret-mode (CPU); TPU is the target' if name=='fused_kernel' else 'XLA'}",
+                row["us_per_call"],
+                f"rel_err={row['rel_err_vs_dense']:.1e};"
+                f"hbm_model_bytes={row['hbm_model_bytes']:.3g};"
+                f"note={'interpret-mode (CPU); TPU is the target' if name == 'fused_kernel' and rep['backend'] != 'tpu' else 'XLA'}",
             )
         )
-    cut = traffic_model(BS, K, N, g, False) / traffic_model(BS, K, N, g, True)
-    rows.append(("kanpaths.fused_hbm_cut", 0.0, f"traffic_cut={cut:.2f}x"))
+    rows.append(
+        ("kanpaths.fused_hbm_cut", 0.0,
+         f"traffic_cut={rep['fused_hbm_cut_vs_dense']:.2f}x")
+    )
+    rows.append(
+        ("kanpaths.fused_kernel_launches", 0.0,
+         f"pallas_calls_per_layer={rep['fused_kernel_launches_per_layer']};"
+         f"tiles={'x'.join(map(str, rep['autotune']['main_tiles']))}")
+    )
+    # stash for benchmarks/run.py to write BENCH_kan_paths.json
+    run.last_report = rep  # type: ignore[attr-defined]
     return rows

@@ -1,11 +1,18 @@
 """Benchmark harness: one module per paper table/figure (+ roofline).
 
-Prints ``name,us_per_call,derived`` CSV (brief deliverable (d))."""
+Prints ``name,us_per_call,derived`` CSV (brief deliverable (d)) and writes
+``BENCH_kan_paths.json`` (µs per KAN path + modeled HBM bytes + autotuned
+tile choices) so future PRs have a perf trajectory to compare against."""
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+KAN_PATHS_JSON = os.path.join(os.path.dirname(__file__), "..",
+                              "BENCH_kan_paths.json")
 
 
 def main() -> None:
@@ -39,6 +46,12 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"{name}.ERROR,0,{traceback.format_exc(limit=1)!r}")
+    rep = getattr(kan_paths.run, "last_report", None)
+    if rep is not None:
+        out = os.path.abspath(KAN_PATHS_JSON)
+        with open(out, "w") as f:
+            json.dump(rep, f, indent=2)
+        print(f"# wrote {out}")
     if failures:
         sys.exit(1)
 

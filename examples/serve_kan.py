@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core.kan_layer import resolve_inference_method
 from repro.models import lm
 from repro.serve.engine import Engine, ServeConfig
 
@@ -23,12 +24,15 @@ def main():
         rs.randint(0, arch.model.vocab, rs.randint(4, 24)).astype(np.int32)
         for _ in range(12)
     ]
+    print(f"backend={jax.default_backend()} "
+          f"kan_inference_method={resolve_inference_method()} "
+          f"decode=scan (one compiled program per generation)")
     t0 = time.time()
     outs = eng.serve_requests(requests, batch_size=4)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     print(f"served {len(requests)} requests / {n_tok} new tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s, CPU)")
+          f"({n_tok/dt:.1f} tok/s, {jax.default_backend()})")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i} prompt_len={len(requests[i])} -> {o[:8].tolist()}...")
 

@@ -18,7 +18,11 @@ Forward paths (selectable, all numerically cross-checked in tests):
 * ``lut``     — tabulated evaluation (paper Fig. 5) scattered dense; inference.
 * ``fused``   — Pallas kernel: B tile built on the fly in VMEM, MXU contraction
   (the paper's B-spline unit streaming straight into the systolic array).
-  Requires ``repro.kernels``; CPU tests run it with ``interpret=True``.
+  Spline AND base term execute in a single ``pallas_call`` (the base GEMM is
+  a kernel epilogue on the already-resident x tile).  Requires
+  ``repro.kernels``; CPU tests run it with ``interpret=True``.
+* ``auto``    — :func:`resolve_inference_method`: ``fused`` on TPU, ``compact``
+  elsewhere (interpret-mode Pallas is correct but slow on CPU).
 """
 
 from __future__ import annotations
@@ -109,6 +113,25 @@ def kan_layer_lut(
     return y + _base_term(params, x)
 
 
+def resolve_inference_method(backend: str | None = None) -> str:
+    """The default serving path: the fused Pallas kernel on TPU (one kernel
+    per layer, B never in HBM — DESIGN.md §2), ``compact`` elsewhere
+    (interpret-mode Pallas is correct on CPU but orders of magnitude slower
+    than the XLA gather path).
+
+    ``$KAN_SAS_INFERENCE_METHOD`` overrides the backend heuristic — e.g. a
+    CPU-hosted dry-run lowering the program it will actually serve on TPU
+    sets it to ``fused``, and a TPU debug session can force ``compact``.
+    """
+    import os
+
+    forced = os.environ.get("KAN_SAS_INFERENCE_METHOD")
+    if forced:
+        return forced
+    backend = backend or jax.default_backend()
+    return "fused" if backend == "tpu" else "compact"
+
+
 def kan_layer_apply(
     params: Params,
     x: jax.Array,
@@ -116,6 +139,8 @@ def kan_layer_apply(
     method: str = "dense",
     lut: jax.Array | None = None,
 ) -> jax.Array:
+    if method == "auto":
+        method = resolve_inference_method()
     if method == "dense":
         return kan_layer_dense(params, x, grid)
     if method == "compact":
@@ -127,8 +152,11 @@ def kan_layer_apply(
     if method == "fused":
         from repro.kernels import ops as kops
 
-        y = kops.kan_fused_gemm(x, params["coeff"], grid)
-        return y + _base_term(params, x)
+        # Spline + base in ONE pallas_call: the base term is an epilogue
+        # contraction on the x tile already resident in VMEM.
+        return kops.kan_fused_gemm(
+            x, params["coeff"], grid, base_w=params.get("base_w")
+        )
     raise ValueError(f"unknown method {method!r}")
 
 

@@ -15,6 +15,7 @@ Validated claim (paper §V): "<1% accuracy drop for all the models
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
@@ -67,6 +68,7 @@ def symmetric_scales(w: jax.Array, axis=None, bits: int = 8) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=8)
 def lut_value_scale(P: int) -> int:
     """Largest power-of-two s with max(B_{0,P}) * s <= 255 (uint8 values).
 
@@ -176,6 +178,47 @@ def quantize_kan_layer(params, grid: SplineGrid, S: int = 256) -> QuantizedKANLa
     )
 
 
+def _quantized_base_term(
+    qlayer: QuantizedKANLayer, x_q: jax.Array, out_shape
+) -> jax.Array | None:
+    """Integer base term: ReLU in the quantised domain + int8 GEMM + rescale
+    (paper Eq. 1 base term with ReLU instead of SiLU)."""
+    if qlayer.base_w_q is None:
+        return None
+    qg = qlayer.qg
+    relu_q = jnp.maximum(x_q, qg.x_quant.zero) - qg.x_quant.zero
+    yb = jnp.einsum(
+        "...k,kn->...n", relu_q, qlayer.base_w_q,
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    return (yb * (qlayer.base_w_scale.reshape(1, -1) * qg.x_quant.scale)).reshape(
+        out_shape
+    )
+
+
+def quantized_kan_forward_fused(
+    qlayer: QuantizedKANLayer, x: jax.Array
+) -> jax.Array:
+    """Kernel-backed integer forward: Align/Compare, ROM, band scatter, int8
+    GEMM *and* the per-channel dequant all inside one ``pallas_call``
+    (``repro.kernels.kan_int8_gemm``); emits ``x.dtype`` directly.
+
+    Numerically identical to :func:`quantized_kan_forward` (same integer
+    accumulator, same dequant multiply) — the serving path on TPU.
+    """
+    from repro.kernels import ops as kops
+
+    qg = qlayer.qg
+    x_q = qg.x_quant.quantize(x)                       # (..., K) int32
+    scale = qlayer.coeff_scale.reshape(-1) / qg.lut_scale
+    y = kops.kan_int8_gemm(
+        x_q, qlayer.lut_u8, qlayer.coeff_q.astype(jnp.int8), qg.grid,
+        scale=scale, lut_scale=qg.lut_scale, out_dtype=x.dtype,
+    )
+    base = _quantized_base_term(qlayer, x_q, y.shape)
+    return y if base is None else y + base.astype(y.dtype)
+
+
 def quantized_kan_forward(qlayer: QuantizedKANLayer, x: jax.Array) -> jax.Array:
     """End-to-end integer KAN layer (paper §V 'integer-only implementation').
 
@@ -202,13 +245,5 @@ def quantized_kan_forward(qlayer: QuantizedKANLayer, x: jax.Array) -> jax.Array:
     )
     y = acc.astype(jnp.float32).reshape(x.shape[:-1] + (N,))
     y = y * (qlayer.coeff_scale.reshape(1, -1) / qg.lut_scale)
-    if qlayer.base_w_q is not None:
-        # ReLU in the integer domain: max(x_q, zero_point) (paper Eq. 1 base
-        # term with ReLU instead of SiLU).
-        relu_q = jnp.maximum(x_q, qg.x_quant.zero) - qg.x_quant.zero
-        yb = jnp.einsum(
-            "...k,kn->...n", relu_q, qlayer.base_w_q,
-            preferred_element_type=jnp.int32,
-        ).astype(jnp.float32)
-        y = y + yb * (qlayer.base_w_scale.reshape(1, -1) * qg.x_quant.scale)
-    return y
+    base = _quantized_base_term(qlayer, x_q, y.shape)
+    return y if base is None else y + base

@@ -1,0 +1,12 @@
+"""Distributed substrate: logical-axis sharding rules and gradient
+compression (DESIGN.md §4).
+
+``sharding`` maps the :class:`repro.models.layers.Axes` trees produced by
+``ParamCtx(mode="axes")`` onto concrete ``PartitionSpec``s for whatever mesh
+the host offers; ``compression`` models the wire formats used for gradient
+all-reduces (bf16 / int8).
+"""
+
+from repro.dist import compression, sharding
+
+__all__ = ["compression", "sharding"]

@@ -1,0 +1,48 @@
+"""Gradient wire-format compression (DESIGN.md §4).
+
+Under data parallelism the gradient all-reduce is the dominant inter-pod
+traffic; compressing the wire format halves (bf16) or quarters (int8) the
+bytes on the slow links.  ``compress_tree`` models this as a
+compress->decompress round trip: the returned tree is float32 again (the
+optimizer is agnostic), carrying exactly the quantization error the wire
+format would introduce.
+
+int8 uses per-tensor symmetric scaling (q = round(g / s), s = max|g|/127),
+matching the coefficient scheme of ``repro.core.quantization``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("bf16", "int8")
+
+
+def _roundtrip_bf16(g: jax.Array) -> jax.Array:
+    return g.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _roundtrip_int8(g: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g: jax.Array, kind: str) -> jax.Array:
+    if kind == "bf16":
+        return _roundtrip_bf16(g)
+    if kind == "int8":
+        return _roundtrip_int8(g)
+    raise ValueError(f"unknown compression kind {kind!r}; expected {KINDS}")
+
+
+def compress_tree(grads, kind: str):
+    """Round-trip a gradient tree through the given wire format."""
+    return jax.tree.map(lambda g: compress_leaf(g, kind), grads)
+
+
+def wire_bytes(grads, kind: str | None) -> int:
+    """Modeled all-reduce payload bytes for a gradient tree."""
+    per = {None: 4, "bf16": 2, "int8": 1}[kind]
+    return sum(leaf.size * per for leaf in jax.tree.leaves(grads))

@@ -1,0 +1,193 @@
+"""Tile autotuner for the KAN Pallas kernels (DESIGN.md §2).
+
+The fused kernels tile the ``(BS, N, K)`` iteration space with
+``(bb, bn, bk)`` blocks; the best tiling depends on the problem shape, the
+dtype (sublane granularity) and the backend.  Rather than hard-coding
+``128/128/16`` everywhere, :func:`get_tiles` resolves tiles in three steps:
+
+1. the **measurement cache** — a JSON file (``~/.cache/kan_sas/
+   autotune.json`` by default, override with ``$KAN_SAS_AUTOTUNE_CACHE``)
+   holding winners recorded by :func:`autotune`;
+2. the **in-repo defaults table** — shapes we have measured on real
+   hardware (currently the MXU-aligned TPU defaults);
+3. a **shape heuristic** — clamp MXU-friendly tiles to the problem size so
+   small problems don't pay for padding to 128.
+
+:func:`autotune` times every candidate from :func:`candidate_tiles` with
+the real kernel (interpret mode on CPU, compiled on TPU), records the
+winner under the problem key, and returns a report row that
+``benchmarks/kan_paths.py`` embeds in ``BENCH_kan_paths.json`` so the tile
+choices are visible in the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+
+Tiles = tuple[int, int, int]
+
+CACHE_ENV = "KAN_SAS_AUTOTUNE_CACHE"
+
+# Sublane granularity per dtype (TPU tiling constraint: second-to-last dim).
+_SUBLANE = {"float32": 8, "bfloat16": 16, "int8": 32, "int32": 8}
+
+# Shapes measured on hardware: (kernel, backend) -> tiles.  The TPU entry is
+# the MXU-native tiling (128-wide output lanes, bk*M ≈ 128 contraction for
+# the default G=5/P=3 grid).
+DEFAULTS: dict[tuple[str, str], Tiles] = {
+    ("fused", "tpu"): (128, 128, 16),
+    ("int8", "tpu"): (128, 128, 16),
+    ("fused", "cpu"): (64, 64, 8),
+    ("int8", "cpu"): (64, 64, 8),
+}
+
+
+def cache_path() -> str:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "kan_sas", "autotune.json"
+    )
+
+
+# (path, mtime_ns) -> parsed cache; avoids a JSON parse per kernel call.
+_mem_cache: dict[tuple[str, int], dict] = {}
+
+
+def _load_cache() -> dict:
+    path = cache_path()
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        return {}
+    key = (path, mtime)
+    if key not in _mem_cache:
+        try:
+            with open(path) as f:
+                _mem_cache.clear()     # at most one live entry
+                _mem_cache[key] = json.load(f)
+        except (OSError, ValueError):
+            return {}
+    return _mem_cache[key]
+
+
+def _save_cache(cache: dict) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: autotuning still works, it just doesn't persist
+
+
+def problem_key(
+    kernel: str, BS: int, K: int, N: int, M: int, dtype, backend: str
+) -> str:
+    return f"{kernel}|BS={BS}|K={K}|N={N}|M={M}|dtype={jax.numpy.dtype(dtype).name}|backend={backend}"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _heuristic(
+    kernel: str, BS: int, K: int, N: int, M: int, dtype, backend: str
+) -> Tiles:
+    """MXU-friendly tiles clamped to the problem (padding-aware)."""
+    sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
+    bb = min(128, _round_up(BS, sub))
+    bn = min(128, _round_up(N, 128 if backend == "tpu" else 32))
+    # contraction width bk*M near 128-512 keeps the MXU busy without
+    # blowing VMEM; clamp to K so tiny layers use one step.
+    bk = max(1, min(K, max(1, 256 // M)))
+    return bb, bn, bk
+
+
+def candidate_tiles(
+    BS: int, K: int, N: int, M: int, dtype=jax.numpy.float32,
+    backend: str | None = None,
+) -> list[Tiles]:
+    """Deduplicated candidate (bb, bn, bk) tilings for one problem."""
+    backend = backend or jax.default_backend()
+    sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
+    bbs = sorted({min(b, _round_up(BS, sub)) for b in (32, 64, 128, 256)})
+    bns = sorted({min(b, _round_up(N, 8)) for b in (64, 128, 256)})
+    bks = sorted({min(b, K) for b in (4, 8, 16, 32) if b * M <= 1024})
+    out: list[Tiles] = []
+    for bb in bbs:
+        for bn in bns:
+            for bk in bks:
+                if (bb, bn, bk) not in out:
+                    out.append((bb, bn, bk))
+    return out
+
+
+def get_tiles(
+    kernel: str, BS: int, K: int, N: int, M: int,
+    dtype=jax.numpy.float32, backend: str | None = None,
+) -> Tiles:
+    """Resolve tiles: measurement cache -> defaults table -> heuristic."""
+    backend = backend or jax.default_backend()
+    key = problem_key(kernel, BS, K, N, M, dtype, backend)
+    hit = _load_cache().get(key)
+    if hit:
+        return tuple(hit["tiles"])  # type: ignore[return-value]
+    if min(BS, N) >= 128 and (kernel, backend) in DEFAULTS:
+        return DEFAULTS[(kernel, backend)]
+    return _heuristic(kernel, BS, K, N, M, dtype, backend)
+
+
+def _time_call(fn: Callable[[], jax.Array], iters: int) -> float:
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def autotune(
+    kernel: str,
+    run: Callable[[int, int, int], jax.Array],
+    BS: int, K: int, N: int, M: int,
+    dtype=jax.numpy.float32,
+    backend: str | None = None,
+    iters: int = 3,
+    candidates: list[Tiles] | None = None,
+) -> dict:
+    """Time every candidate tiling of ``run(bb, bn, bk)``, cache the winner.
+
+    Returns ``{"key", "tiles", "us", "candidates": {tiles_str: us}}`` —
+    the report row the benchmark JSON embeds.
+    """
+    backend = backend or jax.default_backend()
+    key = problem_key(kernel, BS, K, N, M, dtype, backend)
+    cands = candidates or candidate_tiles(BS, K, N, M, dtype, backend)
+    timings: dict[str, float] = {}
+    best: Tiles | None = None
+    best_us = float("inf")
+    for tiles in cands:
+        try:
+            us = _time_call(lambda: run(*tiles), iters)
+        except Exception:
+            continue  # illegal tiling for this backend: skip
+        timings["x".join(map(str, tiles))] = round(us, 1)
+        if us < best_us:
+            best, best_us = tiles, us
+    if best is None:
+        best = get_tiles(kernel, BS, K, N, M, dtype, backend)
+        best_us = float("nan")
+    cache = _load_cache()
+    cache[key] = {"tiles": list(best), "us": round(best_us, 1)}
+    _save_cache(cache)
+    return {"key": key, "tiles": best, "us": best_us, "candidates": timings}

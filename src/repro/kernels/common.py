@@ -1,0 +1,97 @@
+"""In-kernel building blocks shared by the KAN Pallas kernels.
+
+Both the floating-point (`kan_fused_gemm`) and integer (`kan_int8_gemm`)
+datapaths need the same two pieces of the paper's architecture rendered as
+branch-free vector code:
+
+* the B-spline unit (§III-A): evaluate the ``P+1`` non-zero cardinal
+  B-spline values for a tile of inputs entirely in VMEM/registers
+  (:func:`compact_basis_inblock`, :func:`cardinal_values_inblock`);
+* the M-to-N multiplexer run in reverse (§IV-B): place those compact values
+  into the dense ``M = G+P`` band of an MXU tile with compare-selects — no
+  gathers, no scatters (:func:`band_scatter`).
+
+Everything here lowers inside a TPU kernel: only iota / where / arithmetic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bspline import SplineGrid
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def cardinal_values_inblock(xa: jax.Array, P: int) -> jax.Array:
+    """Cardinal B-spline values ``B_{0,P}(xa + (P - i))`` for ``i = 0..P``.
+
+    ``xa`` is the in-interval offset in ``[0, 1)``; the result has shape
+    ``xa.shape + (P+1,)`` ordered by ascending basis index.  Runs the
+    Cox-de Boor triangle on a ``(P+2)``-wide band: since
+    ``u_i = xa + (P-i)`` lies in ``[P-i, P-i+1)``, the degree-0 coefficient
+    vector for point ``i`` is the indicator ``e_{P-i}``.
+    """
+    dtype = xa.dtype
+    offs = dtype.type(P) - jax.lax.broadcasted_iota(
+        jnp.int32, xa.shape + (P + 1,), xa.ndim
+    ).astype(dtype)
+    u = xa[..., None] + offs                                    # (..., P+1)
+    nseg = P + 2
+    seg = jax.lax.broadcasted_iota(jnp.int32, u.shape + (nseg - 1,), u.ndim)
+    b = jnp.where(
+        (u[..., None] >= seg.astype(dtype)) & (u[..., None] < (seg + 1).astype(dtype)),
+        dtype.type(1.0),
+        dtype.type(0.0),
+    )                                                           # (..., P+1, P+1)
+    for p in range(1, P + 1):
+        idx = jax.lax.broadcasted_iota(
+            jnp.int32, u.shape + (nseg - 1 - p,), u.ndim
+        ).astype(dtype)
+        left = (u[..., None] - idx) / dtype.type(p) * b[..., :-1]
+        right = (idx + dtype.type(p + 1) - u[..., None]) / dtype.type(p) * b[..., 1:]
+        b = left + right
+    return b[..., 0]
+
+
+def compact_basis_inblock(
+    x: jax.Array, grid: SplineGrid
+) -> tuple[jax.Array, jax.Array]:
+    """Exact compact N:M evaluation as branch-free vector code.
+
+    Returns ``vals: x.shape + (P+1,)`` (ascending basis index) and the
+    interval index ``k``.  Identical math to
+    :func:`repro.core.bspline.compact_basis`; written to lower cleanly
+    inside a TPU kernel.  Evaluation runs in float32 regardless of
+    ``x.dtype`` (the Cox-de Boor triangle loses too much in bf16); callers
+    cast the resulting band to the MXU input dtype.
+    """
+    P = grid.P
+    xf = x.astype(jnp.float32)
+    z = (xf - jnp.float32(grid.t0)) / jnp.float32(grid.delta)
+    k = jnp.clip(jnp.floor(z).astype(jnp.int32), P, grid.n_basis - 1)
+    xa = jnp.clip(z - k.astype(jnp.float32), 0.0, 1.0)
+    return cardinal_values_inblock(xa, P), k
+
+
+def band_scatter(vals: jax.Array, k: jax.Array, M: int) -> jax.Array:
+    """The M-to-N multiplexer in reverse (paper §IV-B).
+
+    Places compact values ``vals: (..., P+1)`` (ascending basis index, the
+    window ``B_{k-P} .. B_k``) into the dense band ``(..., M)`` with
+    compare-selects — structured N:M sparsity becomes an MXU-aligned dense
+    tile without gathers.  Works for any dtype (float or int).
+    """
+    P = vals.shape[-1] - 1
+    m_iota = jax.lax.broadcasted_iota(jnp.int32, k.shape + (M,), k.ndim)
+    rel = m_iota - (k[..., None] - P)                 # (..., M)
+    zero = jnp.zeros((), vals.dtype)
+    band = jnp.zeros(k.shape + (M,), vals.dtype)
+    for i in range(P + 1):
+        band = band + jnp.where(rel == i, vals[..., i][..., None], zero)
+    return band

@@ -1,7 +1,11 @@
 """Pallas TPU kernel: fused KAN GEMM — the KAN-SAs array itself (paper §III-IV).
 
-Computes ``Y[b, n] = sum_{j,m} B_m(x[b, j]) * C[j, m, n]`` **without ever
-materialising the B-spline activation matrix ``B : (BS, K*(G+P))`` in HBM**.
+Computes the **whole** KAN layer of Eq. 1 in one kernel:
+
+``Y[b, n] = sum_{j,m} B_m(x[b, j]) * C[j, m, n]  +  sum_j ReLU(x[b, j]) * Wb[j, n]``
+
+**without ever materialising the B-spline activation matrix
+``B : (BS, K*(G+P))`` in HBM**, and without a second GEMM for the base term.
 
 This is the TPU rendering of the paper's two architectural moves:
 
@@ -10,14 +14,22 @@ This is the TPU rendering of the paper's two architectural moves:
   values *in VMEM/registers* from the raw ``x`` tile;
 * the N:M vector PE with its M-to-N multiplexer (§IV-B): the multiplexer
   becomes a branch-free compare-select that places the compact values into
-  the dense band of an MXU tile. Structured sparsity is thereby converted
-  into MXU-aligned compute, and the HBM traffic drops from
-  ``X + B + C + Y`` to ``X + C + Y`` — a ``(G+P)``-fold cut of the dominant
-  activation stream (see EXPERIMENTS.md §Perf for the roofline accounting).
+  the dense band of an MXU tile (:func:`repro.kernels.common.band_scatter`).
 
-Grid: ``(BS/bb, N/bn, K/bk)`` with the contraction dim innermost; the output
-tile stays resident in VMEM across the ``K`` sweep (standard Pallas matmul
-revisiting pattern).
+The base term ``w_b · ReLU(x)`` of Eq. 1 rides along as an **epilogue
+contraction on the same x tile**: the tile is already resident in VMEM for
+the spline evaluation, so the base GEMM costs zero extra HBM reads of ``x``
+and no second kernel launch.  HBM traffic drops from ``X + B + C + Y``
+(dense-B baseline, plus another ``X + Wb + Y`` for a separate base GEMM) to
+``X + C + Wb + Y`` — see DESIGN.md §2 for the roofline accounting.
+
+Accumulation is float32 in a VMEM scratch tile regardless of the input
+dtype (bf16 inputs hit the MXU in bf16 but never round the partial sums);
+the output tile is written once, on the last contraction step.
+
+Grid: ``(BS/bb, N/bn, K/bk)`` with the contraction dim innermost; the
+accumulator stays resident in VMEM across the ``K`` sweep (standard Pallas
+matmul revisiting pattern).
 """
 
 from __future__ import annotations
@@ -30,71 +42,55 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bspline import SplineGrid
+from repro.kernels.common import (
+    CompilerParams,
+    band_scatter,
+    compact_basis_inblock,
+)
 
 
-def _compact_basis_inblock(x, grid: SplineGrid):
-    """Exact compact N:M evaluation as branch-free vector code.
-
-    Returns ``vals: x.shape + (P+1,)`` (ascending basis index) and ``k``.
-    Identical math to :func:`repro.core.bspline.compact_basis`, written with
-    only iota/where/arithmetic so it lowers cleanly inside a TPU kernel.
-    """
-    P = grid.P
-    dtype = x.dtype
-    z = (x - dtype.type(grid.t0)) / dtype.type(grid.delta)
-    k = jnp.clip(jnp.floor(z).astype(jnp.int32), P, grid.n_basis - 1)
-    xa = jnp.clip(z - k.astype(dtype), 0.0, 1.0)
-    # Evaluate the cardinal B-spline at u_i = xa + (P - i), i = 0..P.
-    # Since u_i in [P-i, P-i+1), the degree-0 coefficient vector for point i
-    # is e_{P-i}: run the Cox-de Boor triangle on a (P+2)-wide band.
-    offs = dtype.type(P) - jax.lax.broadcasted_iota(
-        jnp.int32, xa.shape + (P + 1,), xa.ndim
-    ).astype(dtype)
-    u = xa[..., None] + offs                                    # (..., P+1)
-    nseg = P + 2
-    seg = jax.lax.broadcasted_iota(jnp.int32, u.shape + (nseg - 1,), u.ndim)
-    b = jnp.where(
-        (u[..., None] >= seg.astype(dtype)) & (u[..., None] < (seg + 1).astype(dtype)),
-        dtype.type(1.0),
-        dtype.type(0.0),
-    )                                                           # (..., P+1, P+1)
-    for p in range(1, P + 1):
-        idx = jax.lax.broadcasted_iota(
-            jnp.int32, u.shape + (nseg - 1 - p,), u.ndim
-        ).astype(dtype)
-        left = (u[..., None] - idx) / dtype.type(p) * b[..., :-1]
-        right = (idx + dtype.type(p + 1) - u[..., None]) / dtype.type(p) * b[..., 1:]
-        b = left + right
-    return b[..., 0], k
-
-
-def _fused_kernel(x_ref, c_ref, y_ref, *, grid: SplineGrid, bk: int):
-    P, M = grid.P, grid.n_basis
+def _fused_kernel(*refs, grid: SplineGrid, has_base: bool):
+    if has_base:
+        x_ref, c_ref, bw_ref, y_ref, acc_ref = refs
+    else:
+        x_ref, c_ref, y_ref, acc_ref = refs
+        bw_ref = None
+    M = grid.n_basis
     x = x_ref[...]                                    # (bb, bk)
-    vals, k = _compact_basis_inblock(x, grid)         # (bb, bk, P+1), (bb, bk)
+    vals, k = compact_basis_inblock(x, grid)          # f32 (bb, bk, P+1), i32
 
     # M-to-N multiplexer, run in reverse (paper §IV-B): place the compact
     # values into the dense band with compare-selects — no gathers.
-    m_iota = jax.lax.broadcasted_iota(jnp.int32, x.shape + (M,), x.ndim)
-    rel = m_iota - (k[..., None] - P)                 # (bb, bk, M)
-    band = jnp.zeros(x.shape + (M,), x.dtype)
-    for i in range(P + 1):
-        band = band + jnp.where(rel == i, vals[..., i][..., None], x.dtype.type(0.0))
+    band = band_scatter(vals, k, M)                   # f32 (bb, bk, M)
 
-    bb = x.shape[0]
-    B_tile = band.reshape(bb, bk * M)                 # (bb, bk*M) in VMEM only
+    bb, bk = x.shape
     c = c_ref[...]                                    # (bk*M, bn)
+    B_tile = band.reshape(bb, bk * M).astype(c.dtype)  # VMEM only, never HBM
     acc = jnp.dot(B_tile, c, preferred_element_type=jnp.float32)
 
+    if has_base:
+        # Base-term epilogue (Eq. 1): the x tile is already in VMEM — one
+        # extra MXU contraction, zero extra HBM traffic for x.
+        xb = jnp.maximum(x, jnp.zeros((), x.dtype))   # ReLU in input dtype
+        acc = acc + jnp.dot(
+            xb.astype(bw_ref.dtype), bw_ref[...],
+            preferred_element_type=jnp.float32,
+        )
+
     kk = pl.program_id(2)
+    nk = pl.num_programs(2)
 
     @pl.when(kk == 0)
     def _init():
-        y_ref[...] = acc.astype(y_ref.dtype)
+        acc_ref[...] = acc
 
     @pl.when(kk > 0)
-    def _acc():
-        y_ref[...] = (y_ref[...].astype(jnp.float32) + acc).astype(y_ref.dtype)
+    def _accumulate():
+        acc_ref[...] = acc_ref[...] + acc
+
+    @pl.when(kk == nk - 1)
+    def _epilogue():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
 @functools.partial(
@@ -104,38 +100,52 @@ def kan_fused_gemm_pallas(
     x: jax.Array,
     coeff: jax.Array,
     grid: SplineGrid,
+    base_w: jax.Array | None = None,
     bb: int = 128,
     bn: int = 128,
     bk: int = 16,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fused KAN GEMM. ``x: (BS, K)``, ``coeff: (K, M, N)`` -> ``(BS, N)``.
+    """Fused KAN layer. ``x: (BS, K)``, ``coeff: (K, M, N)``,
+    ``base_w: (K, N) | None`` -> ``(BS, N)`` in ``x.dtype``.
 
+    When ``base_w`` is given the base term ``ReLU(x) @ base_w`` is fused
+    into the kernel epilogue — spline + base in a single ``pallas_call``.
     Block sizes default to MXU-friendly tiles (contraction width ``bk*M``);
     inputs are padded to block multiples (padded features carry zero
-    coefficients, hence contribute nothing).
+    coefficients/base weights, hence contribute nothing).
     """
     BS, K = x.shape
     Kc, M, N = coeff.shape
     assert Kc == K and M == grid.n_basis
+    has_base = base_w is not None
     pb, pk, pn = -BS % bb, -K % bk, -N % bn
     xp = jnp.pad(x, ((0, pb), (0, pk)), constant_values=grid.x_min)
     cp = jnp.pad(coeff, ((0, pk), (0, 0), (0, pn)))
     c2 = cp.reshape((K + pk) * M, N + pn)
     gb, gn, gk = (BS + pb) // bb, (N + pn) // bn, (K + pk) // bk
 
+    in_specs = [
+        pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk * M, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [xp, c2]
+    if has_base:
+        assert base_w.shape == (K, N), (base_w.shape, (K, N))
+        bwp = jnp.pad(base_w.astype(coeff.dtype), ((0, pk), (0, pn)))
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+        operands.append(bwp)
+
     y = pl.pallas_call(
-        functools.partial(_fused_kernel, grid=grid, bk=bk),
+        functools.partial(_fused_kernel, grid=grid, has_base=has_base),
         grid=(gb, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk * M, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((BS + pb, N + pn), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(xp, c2)
+    )(*operands)
     return y[:BS, :N]

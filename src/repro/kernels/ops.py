@@ -2,6 +2,11 @@
 
 On CPU (this container) the kernels execute with ``interpret=True``; on a
 real TPU backend they compile to Mosaic. The switch is automatic.
+
+Tile sizes default to ``None`` = "ask the autotuner": the measurement cache
+(``kernels/autotune.py``) is consulted per problem shape, falling back to
+the in-repo defaults table and a padding-aware heuristic.  Explicit
+``bb/bn/bk`` always win (the kernel unit tests pin them).
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bspline import SplineGrid
+from repro.kernels import autotune as _tune
 from repro.kernels import bspline_lut as _lut
 from repro.kernels import kan_fused_gemm as _fused
 from repro.kernels import kan_int8_gemm as _int8
@@ -19,6 +25,13 @@ from repro.kernels import kan_int8_gemm as _int8
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _resolve_tiles(kernel, BS, K, N, M, dtype, bb, bn, bk):
+    if bb is None or bn is None or bk is None:
+        tb, tn, tk = _tune.get_tiles(kernel, BS, K, N, M, dtype)
+        bb, bn, bk = bb or tb, bn or tn, bk or tk
+    return bb, bn, bk
 
 
 def bspline_lut(
@@ -33,10 +46,12 @@ def bspline_lut(
 
 def kan_fused_gemm(
     x: jax.Array, coeff: jax.Array, grid: SplineGrid,
-    bb: int = 128, bn: int = 128, bk: int = 16,
+    base_w: jax.Array | None = None,
+    bb: int | None = None, bn: int | None = None, bk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused on-the-fly-B KAN GEMM (spline term of Eq. 1).
+    """Fused KAN layer (Eq. 1): spline term + optional base term in ONE
+    ``pallas_call`` — no separate base GEMM, no second HBM read of ``x``.
 
     Accepts ``x`` of shape ``(..., K)``; leading dims are flattened.
     """
@@ -44,24 +59,48 @@ def kan_fused_gemm(
         interpret = _interpret_default()
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    BS, K = x2.shape
+    N, M = coeff.shape[-1], grid.n_basis
+    bb, bn, bk = _resolve_tiles("fused", BS, K, N, M, x.dtype, bb, bn, bk)
     y = _fused.kan_fused_gemm_pallas(
-        x2, coeff, grid, bb=bb, bn=bn, bk=bk, interpret=interpret
+        x2, coeff, grid, base_w=base_w, bb=bb, bn=bn, bk=bk,
+        interpret=interpret,
     )
     return y.reshape(lead + (coeff.shape[-1],))
 
 
 def kan_int8_gemm(
     x_q: jax.Array, lut_u8: jax.Array, coeff_q: jax.Array, grid: SplineGrid,
-    bb: int = 128, bn: int = 128, bk: int = 16, qmax: int = 255,
+    scale: jax.Array | None = None,
+    bb: int | None = None, bn: int | None = None, bk: int | None = None,
+    qmax: int = 255,
+    lut_scale: int | None = None,
+    out_dtype=jnp.float32,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Integer-only fused KAN GEMM -> int32 accumulator."""
+    """Integer-only fused KAN GEMM.
+
+    ``lut_u8`` fixes the table resolution ``S``; the kernel regenerates the
+    ROM in-register (see ``kan_int8_gemm.py``), so its *value scale* must be
+    known: pass ``lut_scale`` explicitly (e.g. ``QuantizedGrid.lut_scale``),
+    or leave it ``None`` to infer-and-verify from a concrete table (a traced
+    table then assumes the default power-of-two scale).  With ``scale=None``
+    returns the raw int32 accumulator; with a per-channel ``scale: (N,)``
+    the dequant multiply is fused into the kernel epilogue and the result is
+    ``out_dtype``.
+    """
     if interpret is None:
         interpret = _interpret_default()
+    if lut_scale is None:
+        lut_scale = _int8.resolve_lut_scale(lut_u8, grid, lut_u8.shape[0])
     lead = x_q.shape[:-1]
     x2 = x_q.reshape(-1, x_q.shape[-1])
+    BS, K = x2.shape
+    N, M = coeff_q.shape[-1], grid.n_basis
+    bb, bn, bk = _resolve_tiles("int8", BS, K, N, M, jnp.int8, bb, bn, bk)
     y = _int8.kan_int8_gemm_pallas(
-        x2, lut_u8, coeff_q, grid, bb=bb, bn=bn, bk=bk, qmax=qmax,
-        interpret=interpret,
+        x2, coeff_q, grid, scale=scale, bb=bb, bn=bn, bk=bk, qmax=qmax,
+        S=lut_u8.shape[0], lut_scale=lut_scale,
+        out_dtype=out_dtype, interpret=interpret,
     )
     return y.reshape(lead + (coeff_q.shape[-1],))

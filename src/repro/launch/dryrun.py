@@ -55,6 +55,15 @@ DTYPE_BYTES = {
 }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions (list of
+    per-program dicts on some, a plain dict on others)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Sum result bytes per collective class from optimized HLO.
 
@@ -272,7 +281,7 @@ def run_cell(
         "temp_bytes": int(ma.temp_size_in_bytes),
         "peak_bytes": int(ma.peak_memory_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     result["cost"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -335,7 +344,7 @@ def _lower_costfaithful(model, cell, mesh, arch_name, n_rep):
                 out_shardings=(None, cache_shard),
             ).lower(params_in, inputs["tokens"], caches_in, inputs["pos"])
         compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -66,12 +66,25 @@ def _kan_ffn_init(ctx: ParamCtx, d: int, ff: int, grid: SplineGrid) -> dict:
     }
 
 
-def _kan_ffn(params: dict, x: jax.Array, grid: SplineGrid) -> jax.Array:
+def _kan_ffn(
+    params: dict, x: jax.Array, grid: SplineGrid, method: str = "dense"
+) -> jax.Array:
+    """Two spline layers d -> ff -> d.
+
+    ``method="dense"`` is the differentiable training path; inference
+    callers (prefill/decode) pass :func:`KL.resolve_inference_method` —
+    the fused Pallas kernel on TPU (spline + base in one ``pallas_call``
+    per layer), ``compact`` elsewhere.
+    """
     lead = x.shape[:-1]
     xf = jnp.tanh(x.reshape(-1, x.shape[-1]))   # squash into the spline domain
-    h = KL.kan_layer_dense({"coeff": params["c1"], "base_w": params["b1"]}, xf, grid)
+    h = KL.kan_layer_apply(
+        {"coeff": params["c1"], "base_w": params["b1"]}, xf, grid, method
+    )
     h = jnp.tanh(h)
-    y = KL.kan_layer_dense({"coeff": params["c2"], "base_w": params["b2"]}, h, grid)
+    y = KL.kan_layer_apply(
+        {"coeff": params["c2"], "base_w": params["b2"]}, h, grid, method
+    )
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
 
 
@@ -216,7 +229,9 @@ def block_prefill(
             y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
             x = x + y2
         else:
-            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid)
+            # inference path: fused Pallas kernel on TPU, compact elsewhere
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid,
+                             method=KL.resolve_inference_method())
         return x, cache
     if blk.kind == "mamba2":
         y, st = S.mamba2_forward(params["mamba"], blk.mamba, h, return_state=True)
@@ -290,7 +305,9 @@ def block_decode_step(
             y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
             x = x + y2
         else:
-            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid)
+            # inference path: fused Pallas kernel on TPU, compact elsewhere
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid,
+                             method=KL.resolve_inference_method())
         return x, cache
     if blk.kind == "mamba2":
         y, cache = S.mamba2_decode_step(params["mamba"], blk.mamba, h, cache)

@@ -1,16 +1,23 @@
 """Batched serving engine: prefill + decode with KV caches.
 
-The engine jits one ``prefill`` and one ``decode_step`` per (batch, seq)
-bucket and runs greedy/temperature sampling. Continuous batching is modelled
-with per-slot positions: finished sequences keep decoding into a dead slot
-until the batch drains (the standard static-batch serving compromise; true
-continuous batching needs host-side slot swapping, which `serve_requests`
-implements at bucket granularity)."""
+The engine jits one ``prefill`` per (batch, seq) bucket and ONE
+scan-over-steps decode program per batch shape: the whole generation after
+prefill is a single compiled ``jax.lax.scan`` (``max_new_tokens`` static),
+so a request costs two XLA dispatches instead of ``max_new_tokens`` Python
+round-trips.  Continuous batching is modelled with per-slot positions:
+finished sequences keep decoding into a dead slot until the batch drains
+(the standard static-batch serving compromise; true continuous batching
+needs host-side slot swapping, which ``serve_requests`` implements at
+bucket granularity).
+
+``serve_requests`` buckets requests by prompt length before batching, so a
+mixed-length request list pads each bucket to its own max instead of the
+global max (DESIGN.md §3).
+"""
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +33,7 @@ class ServeConfig:
     temperature: float = 0.0
     eos_id: int = -1             # -1: never stops early
     compute_dtype: str = "float32"
+    decode_impl: str = "scan"    # "scan" (one compiled program) | "loop"
 
 
 class Engine:
@@ -33,7 +41,6 @@ class Engine:
         self.params = params
         self.model = model_cfg
         self.cfg = serve_cfg
-        dt = jnp.dtype(serve_cfg.compute_dtype).type
         self._dt = jnp.float32 if serve_cfg.compute_dtype == "float32" else jnp.bfloat16
 
         self._prefill = jax.jit(
@@ -47,6 +54,10 @@ class Engine:
             ),
             donate_argnums=(2,),   # caches update in place
         )
+        # scan decode: the whole generation is one compiled program
+        self._decode_scan = jax.jit(
+            self._scan_impl, static_argnums=(0,), donate_argnums=(3,)
+        )
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.cfg.temperature <= 0.0:
@@ -54,6 +65,24 @@ class Engine:
         return jax.random.categorical(key, logits / self.cfg.temperature).astype(
             jnp.int32
         )
+
+    def _scan_impl(self, steps, params, tok0, caches, pos0, key0):
+        """(steps static) scan body == one loop iteration of the unrolled
+        decode, so scan and loop are bit-identical (tested)."""
+
+        def body(carry, _):
+            tok, caches, pos, key = carry
+            lg, caches = lm.decode_step(
+                params, self.model, tok, caches, pos, self._dt
+            )
+            key, kt = jax.random.split(key)
+            nxt = self._sample(lg, kt)[:, None]
+            return (nxt, caches, pos + 1, key), nxt[:, 0]
+
+        (_, caches, _, _), toks = jax.lax.scan(
+            body, (tok0, caches, pos0, key0), None, length=steps
+        )
+        return toks, caches   # toks: (steps, B)
 
     def generate(self, prompts: np.ndarray, seed: int = 0) -> np.ndarray:
         """prompts: (B, T_prompt) int32 -> (B, max_new_tokens) int32."""
@@ -63,31 +92,42 @@ class Engine:
         key = jax.random.PRNGKey(seed)
         key, k0 = jax.random.split(key)
         tok = self._sample(logits[:, T - 1], k0)[:, None]
-        out = [tok]
         # synchronized decode (scalar position): collective-free cache writes
         pos = jnp.asarray(T, jnp.int32)
-        for _ in range(self.cfg.max_new_tokens - 1):
-            lg, caches = self._decode(self.params, tok, caches, pos)
-            key, kt = jax.random.split(key)
-            tok = self._sample(lg, kt)[:, None]
-            out.append(tok)
-            pos = pos + 1
-        return np.asarray(jnp.concatenate(out, axis=1))
+        steps = self.cfg.max_new_tokens - 1
+        if self.cfg.decode_impl == "scan":
+            toks, _ = self._decode_scan(steps, self.params, tok, caches, pos, key)
+            out = jnp.concatenate([tok, toks.T], axis=1)
+        else:  # python-loop reference (one dispatch per step)
+            outs = [tok]
+            for _ in range(steps):
+                lg, caches = self._decode(self.params, tok, caches, pos)
+                key, kt = jax.random.split(key)
+                tok = self._sample(lg, kt)[:, None]
+                outs.append(tok)
+                pos = pos + 1
+            out = jnp.concatenate(outs, axis=1)
+        return np.asarray(out)
 
     def serve_requests(
         self, requests: list[np.ndarray], batch_size: int = 8, seed: int = 0
     ) -> list[np.ndarray]:
-        """Bucket requests to a fixed batch (pad with copies), drain bucket
-        by bucket — the batched-serving driver used by examples/serve_kan.py."""
-        results: list[np.ndarray] = []
-        for i in range(0, len(requests), batch_size):
-            bucket = requests[i : i + batch_size]
+        """Bucket requests BY LENGTH into fixed batches (pad with copies) and
+        drain bucket by bucket — the batched-serving driver used by
+        examples/serve_kan.py.  Length-sorting means each bucket pads to its
+        own max prompt length, not the global max."""
+        order = sorted(range(len(requests)), key=lambda i: requests[i].shape[0])
+        results: list[np.ndarray | None] = [None] * len(requests)
+        for bi, start in enumerate(range(0, len(order), batch_size)):
+            idxs = order[start : start + batch_size]
+            bucket = [requests[i] for i in idxs]
             T = max(r.shape[0] for r in bucket)
             padded = np.stack(
                 [np.pad(r, (T - r.shape[0], 0), constant_values=0) for r in bucket]
             )
             while padded.shape[0] < batch_size:
                 padded = np.concatenate([padded, padded[-1:]], axis=0)
-            gen = self.generate(padded.astype(np.int32), seed=seed + i)
-            results.extend(gen[: len(bucket)])
-        return results
+            gen = self.generate(padded.astype(np.int32), seed=seed + bi)
+            for j, i in enumerate(idxs):
+                results[i] = gen[j]
+        return results  # type: ignore[return-value]

@@ -52,7 +52,10 @@ def test_pipeline_matches_plain_loss():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd=".",
+        # JAX_PLATFORMS=cpu: the script fakes host devices; without it jax
+        # may probe a TPU runtime (slow metadata retries on TPU-image hosts)
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"}, cwd=".",
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "PP_OK" in proc.stdout, proc.stdout
