@@ -2,7 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV (brief deliverable (d)) and writes
 ``BENCH_kan_paths.json`` (µs per KAN path + modeled HBM bytes + autotuned
-tile choices) so future PRs have a perf trajectory to compare against."""
+tile choices) so future PRs have a perf trajectory to compare against.
+
+``--smoke`` runs only the kanpaths suite at reduced shapes (sets
+``$KAN_SAS_BENCH_SMOKE=1``) and *fails* unless the written JSON carries the
+sparse-path rows — the CI gate that keeps the N:M sparse datapath in the
+perf trajectory."""
 
 from __future__ import annotations
 
@@ -15,7 +20,27 @@ KAN_PATHS_JSON = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_kan_paths.json")
 
 
+def _check_sparse_rows(rep: dict) -> list[str]:
+    """The sparse-path rows every report must carry (CI smoke gate)."""
+    problems = []
+    if "sparse_kernel" not in rep.get("paths", {}):
+        problems.append("paths.sparse_kernel missing")
+    decode_rows = rep.get("decode", {}).get("rows", {})
+    if not decode_rows:
+        problems.append("decode.rows missing")
+    for bs_key, row in decode_rows.items():
+        if "sparse" not in row:
+            problems.append(f"decode.rows[{bs_key}].sparse missing")
+    if "sparse_coeff_cut_vs_fused" not in rep:
+        problems.append("sparse_coeff_cut_vs_fused missing")
+    return problems
+
+
 def main() -> None:
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        os.environ["KAN_SAS_BENCH_SMOKE"] = "1"
+
     from benchmarks import (
         app_utilization,
         arkane_compare,
@@ -37,6 +62,8 @@ def main() -> None:
         ("kanpaths", kan_paths),
         ("roofline", roofline),
     ]
+    if smoke:
+        suites = [("kanpaths", kan_paths)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in suites:
@@ -52,6 +79,13 @@ def main() -> None:
         with open(out, "w") as f:
             json.dump(rep, f, indent=2)
         print(f"# wrote {out}")
+        missing = _check_sparse_rows(rep)
+        if missing:
+            failures += 1
+            print(f"# SPARSE ROWS MISSING: {missing}")
+    elif smoke:
+        failures += 1
+        print("# kanpaths produced no report — BENCH_kan_paths.json not written")
     if failures:
         sys.exit(1)
 

@@ -25,7 +25,8 @@ def main():
         for _ in range(12)
     ]
     print(f"backend={jax.default_backend()} "
-          f"kan_inference_method={resolve_inference_method()} "
+          f"kan_method_prefill={resolve_inference_method(rows=4 * 24)} "
+          f"kan_method_decode={resolve_inference_method(rows=4)} "
           f"decode=scan (one compiled program per generation)")
     t0 = time.time()
     outs = eng.serve_requests(requests, batch_size=4)

@@ -109,11 +109,30 @@ def cox_de_boor_dense(x: jax.Array, grid: SplineGrid) -> jax.Array:
     Iterative (bottom-up) Cox-de Boor; differentiable in ``x`` a.e. and exact
     for any degree. This is the paper's "conventional" software evaluation and
     the oracle for the tabulated paths.
+
+    Boundary convention (shared by every evaluation path): out-of-domain
+    inputs saturate to the boundary basis (the paper's Eq. 5 address clip),
+    and ``x == x_max`` activates the *last in-domain* interval — the basis at
+    the right edge is ``B_G .. B_{G+P-1}`` evaluated as the left limit, never
+    the all-zero row a purely half-open interval test would produce.
     """
     knots = jnp.asarray(grid.knots(), dtype=x.dtype)
-    xx = x[..., None]
+    # Saturate out-of-domain inputs to the boundary (Eq. 5 address clip, as
+    # the compact/LUT/kernel paths do). Clamping to the *knot values* makes
+    # the endpoint tests below exact in x.dtype.
+    xx = jnp.clip(x, knots[grid.P], knots[grid.n_basis])[..., None]
     # Degree 0: indicator of each of the G+2P intervals.
-    b = jnp.where((xx >= knots[:-1]) & (xx < knots[1:]), 1.0, 0.0).astype(x.dtype)
+    inside = (xx >= knots[:-1]) & (xx < knots[1:])
+    # Close the right edge of the last in-domain interval: x == x_max belongs
+    # to [t_{G+P-1}, t_{G+P}] (left limit), not to the first right-extension
+    # interval — with half-open tests alone the endpoint basis would depend
+    # on extension intervals existing (and is all-zero for clamped knots).
+    iota = jnp.arange(knots.shape[0] - 1)
+    on_edge = xx == knots[grid.n_basis]
+    inside = (inside | (on_edge & (iota == grid.n_basis - 1))) & ~(
+        on_edge & (iota == grid.n_basis)
+    )
+    b = jnp.where(inside, 1.0, 0.0).astype(x.dtype)
     for p in range(1, grid.P + 1):
         t_i = knots[: -(p + 1)]          # t_i
         t_ip = knots[p:-1]               # t_{i+p}
@@ -175,7 +194,10 @@ def compact_basis(x: jax.Array, grid: SplineGrid) -> tuple[jax.Array, jax.Array]
     """
     z = align(x, grid)
     k = interval_index(x, grid)
-    xa = z - k.astype(z.dtype)
+    # Saturate the in-interval offset (paper Eq. 5 address clip): out-of-
+    # domain inputs evaluate the boundary basis, matching the dense oracle,
+    # the LUT path and the Pallas kernels (compact_basis_inblock).
+    xa = jnp.clip(z - k.astype(z.dtype), 0.0, 1.0)
     offs = jnp.arange(grid.P, -1, -1, dtype=z.dtype)  # P, P-1, ..., 0
     vals = cardinal_bspline(xa[..., None] + offs, grid.P)
     return vals, k

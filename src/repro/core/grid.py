@@ -35,14 +35,20 @@ def refit_coefficients(
 
     coeff: (K, M_old, N) -> returns (K, M_new, N) minimising
     ``||B_new @ c_new - B_old @ c_old||`` over dense domain samples.
+
+    The least-squares solve always runs in (at least) float32: under bf16
+    coefficients ``jnp.linalg.lstsq`` is unsupported-or-garbage, so the
+    system is promoted for the solve and the solution cast back.
     """
-    xs = jnp.linspace(old_grid.x_min, old_grid.x_max, n_samples, dtype=coeff.dtype)
+    solve_dtype = jnp.promote_types(coeff.dtype, jnp.float32)
+    xs = jnp.linspace(old_grid.x_min, old_grid.x_max, n_samples, dtype=solve_dtype)
     B_old = bspline.cox_de_boor_dense(xs, old_grid)      # (S, M_old)
     B_new = bspline.cox_de_boor_dense(xs, new_grid)      # (S, M_new)
-    targets = jnp.einsum("sm,kmn->skn", B_old, coeff)    # (S, K, N)
+    targets = jnp.einsum("sm,kmn->skn", B_old, coeff.astype(solve_dtype))
     sol = jnp.linalg.lstsq(B_new, targets.reshape(n_samples, -1))[0]
     K, _, N = coeff.shape
-    return sol.reshape(new_grid.n_basis, K, N).transpose(1, 0, 2)
+    out = sol.reshape(new_grid.n_basis, K, N).transpose(1, 0, 2)
+    return out.astype(coeff.dtype)
 
 
 def nonuniform_to_uniform(
@@ -61,25 +67,39 @@ def nonuniform_to_uniform(
     knots = np.asarray(knots, dtype=np.float64)
     x_min, x_max = float(knots[P]), float(knots[-P - 1])
     new_grid = SplineGrid(x_min, x_max, G_new, P)
-    xs = jnp.linspace(x_min, x_max, n_samples)
+    xs_np = np.linspace(x_min, x_max, n_samples)
     # Evaluate the non-uniform basis exactly (generic Cox-de Boor on the
     # provided knots) — small numpy loop is fine, this is an offline refit.
     M_old = len(knots) - P - 1
     b = np.where(
-        (xs[:, None] >= knots[None, :-1]) & (xs[:, None] < knots[None, 1:]), 1.0, 0.0
+        (xs_np[:, None] >= knots[None, :-1]) & (xs_np[:, None] < knots[None, 1:]),
+        1.0, 0.0,
     )
+    # Close the right edge of the last in-domain interval. With half-open
+    # tests alone the sample at exactly x_max lands in no interval when the
+    # right knots are clamped/repeated (the usual non-uniform convention) —
+    # the basis row is all-zero and the lstsq targets are corrupted, since
+    # np.linspace includes the endpoint.
+    dom = np.where((knots[:-1] < knots[1:]) & (knots[1:] <= x_max + 1e-12))[0]
+    last_dom = int(dom.max())
+    on_edge = xs_np >= knots[last_dom + 1]
+    b[on_edge] = 0.0
+    b[on_edge, last_dom] = 1.0
     for p in range(1, P + 1):
         nb = np.zeros((n_samples, b.shape[1] - 1))
         for i in range(b.shape[1] - 1):
             d1 = knots[i + p] - knots[i]
             d2 = knots[i + p + 1] - knots[i + 1]
-            left = ((np.asarray(xs) - knots[i]) / d1) * b[:, i] if d1 > 0 else 0.0
-            right = ((knots[i + p + 1] - np.asarray(xs)) / d2) * b[:, i + 1] if d2 > 0 else 0.0
+            left = ((xs_np - knots[i]) / d1) * b[:, i] if d1 > 0 else 0.0
+            right = ((knots[i + p + 1] - xs_np) / d2) * b[:, i + 1] if d2 > 0 else 0.0
             nb[:, i] = left + right
         b = nb
-    B_old = jnp.asarray(b[:, :M_old], dtype=coeff.dtype)
-    B_new = bspline.cox_de_boor_dense(xs.astype(coeff.dtype), new_grid)
-    targets = jnp.einsum("sm,kmn->skn", B_old, coeff)
+    solve_dtype = jnp.promote_types(coeff.dtype, jnp.float32)  # lstsq needs fp32+
+    xs = jnp.asarray(xs_np, dtype=solve_dtype)
+    B_old = jnp.asarray(b[:, :M_old], dtype=solve_dtype)
+    B_new = bspline.cox_de_boor_dense(xs, new_grid)
+    targets = jnp.einsum("sm,kmn->skn", B_old, coeff.astype(solve_dtype))
     sol = jnp.linalg.lstsq(B_new, targets.reshape(n_samples, -1))[0]
     K, _, N = coeff.shape
-    return new_grid, sol.reshape(new_grid.n_basis, K, N).transpose(1, 0, 2)
+    out = sol.reshape(new_grid.n_basis, K, N).transpose(1, 0, 2)
+    return new_grid, out.astype(coeff.dtype)

@@ -21,8 +21,14 @@ Forward paths (selectable, all numerically cross-checked in tests):
   Spline AND base term execute in a single ``pallas_call`` (the base GEMM is
   a kernel epilogue on the already-resident x tile).  Requires
   ``repro.kernels``; CPU tests run it with ``interpret=True``.
-* ``auto``    — :func:`resolve_inference_method`: ``fused`` on TPU, ``compact``
-  elsewhere (interpret-mode Pallas is correct but slow on CPU).
+* ``sparse``  — Pallas kernel: the paper's N:M vector PE (§IV-A/B). Each input
+  contracts only its ``P+1`` non-zero values against a *gathered*
+  ``(P+1, N)`` coefficient slab — ``(G+P)/(P+1)×`` fewer MACs and
+  coefficient reads than ``fused``; wins in the memory-bound small-batch /
+  decode regime (DESIGN.md §2a).
+* ``auto``    — :func:`resolve_inference_method`: on TPU, ``sparse`` at decode
+  row counts and ``fused`` otherwise; ``compact`` off-TPU (interpret-mode
+  Pallas is correct but slow on CPU).
 """
 
 from __future__ import annotations
@@ -113,15 +119,49 @@ def kan_layer_lut(
     return y + _base_term(params, x)
 
 
-def resolve_inference_method(backend: str | None = None) -> str:
-    """The default serving path: the fused Pallas kernel on TPU (one kernel
-    per layer, B never in HBM — DESIGN.md §2), ``compact`` elsewhere
-    (interpret-mode Pallas is correct on CPU but orders of magnitude slower
-    than the XLA gather path).
+@functools.lru_cache(maxsize=4)
+def _sparse_kernel_compiles(backend: str) -> bool:
+    """Probe (once per process) that the deployed compiler can lower the
+    sparse kernel's VMEM gather (Mosaic dynamic-gather) — so ``auto`` can
+    fall back to the proven fused kernel instead of failing every decode
+    step on a jaxlib without it.  Only probes when the queried backend is
+    the *actual* one (hypothetical queries, e.g. a CPU-hosted dry-run asking
+    about TPU, assume support)."""
+    if backend != "tpu" or jax.default_backend() != "tpu":
+        return True  # off-TPU runs interpret mode: plain XLA gather
+    try:
+        from repro.kernels import ops as kops
 
-    ``$KAN_SAS_INFERENCE_METHOD`` overrides the backend heuristic — e.g. a
-    CPU-hosted dry-run lowering the program it will actually serve on TPU
-    sets it to ``fused``, and a TPU debug session can force ``compact``.
+        g = SplineGrid()
+        x = jnp.zeros((1, 2), jnp.float32)
+        c = jnp.zeros((2, g.n_basis, 8), jnp.float32)
+        jax.block_until_ready(
+            kops.kan_sparse_gemm(x, c, g, bb=8, bn=8, bk=2, interpret=False)
+        )
+        return True
+    except Exception:
+        return False
+
+
+def resolve_inference_method(
+    backend: str | None = None, rows: int | None = None
+) -> str:
+    """The default serving path per backend and batch regime (DESIGN.md §2a).
+
+    On TPU: the ``sparse`` N:M kernel when the flattened row count is in the
+    decode/small-batch regime (``rows <= $KAN_SAS_SPARSE_MAX_ROWS``,
+    default 8) — there the dense-band GEMM is memory-bound and the sparse
+    kernel's ``(G+P)/(P+1)×`` smaller coefficient stream wins; the ``fused``
+    kernel otherwise (one kernel per layer, B never in HBM — DESIGN.md §2).
+    Off-TPU: ``compact`` (interpret-mode Pallas is correct on CPU but orders
+    of magnitude slower than the XLA gather path).
+
+    ``rows`` is the number of flattened input rows the layer will see
+    (batch·seq for prefill, batch for decode); when unknown (``None``) the
+    large-batch answer is returned.  ``$KAN_SAS_INFERENCE_METHOD`` overrides
+    everything — e.g. a CPU-hosted dry-run lowering the program it will
+    actually serve on TPU sets it to ``fused``, and a TPU debug session can
+    force ``compact``.
     """
     import os
 
@@ -129,7 +169,12 @@ def resolve_inference_method(backend: str | None = None) -> str:
     if forced:
         return forced
     backend = backend or jax.default_backend()
-    return "fused" if backend == "tpu" else "compact"
+    if backend != "tpu":
+        return "compact"
+    max_rows = int(os.environ.get("KAN_SAS_SPARSE_MAX_ROWS", "8"))
+    if rows is not None and rows <= max_rows and _sparse_kernel_compiles(backend):
+        return "sparse"
+    return "fused"
 
 
 def kan_layer_apply(
@@ -140,7 +185,9 @@ def kan_layer_apply(
     lut: jax.Array | None = None,
 ) -> jax.Array:
     if method == "auto":
-        method = resolve_inference_method()
+        # rows = flattened inputs the kernel will see: the batch-regime
+        # signal that picks sparse (decode) vs fused (prefill/train) on TPU.
+        method = resolve_inference_method(rows=math.prod(x.shape[:-1]))
     if method == "dense":
         return kan_layer_dense(params, x, grid)
     if method == "compact":
@@ -155,6 +202,14 @@ def kan_layer_apply(
         # Spline + base in ONE pallas_call: the base term is an epilogue
         # contraction on the x tile already resident in VMEM.
         return kops.kan_fused_gemm(
+            x, params["coeff"], grid, base_w=params.get("base_w")
+        )
+    if method == "sparse":
+        from repro.kernels import ops as kops
+
+        # The N:M vector PE: P+1-wide gathered-slab contraction, base term
+        # fused as the same epilogue — one pallas_call per layer.
+        return kops.kan_sparse_gemm(
             x, params["coeff"], grid, base_w=params.get("base_w")
         )
     raise ValueError(f"unknown method {method!r}")

@@ -142,8 +142,6 @@ class GEMMWorkload:
     @property
     def useful_macs(self) -> float:
         nnz = self.N if self.kan else 1
-        per_in = self.M if self.kan else 1
-        del per_in
         return float(self.BS) * self.K * nnz * self.N_out
 
 

@@ -2,28 +2,41 @@
 
 The fused kernels tile the ``(BS, N, K)`` iteration space with
 ``(bb, bn, bk)`` blocks; the best tiling depends on the problem shape, the
-dtype (sublane granularity) and the backend.  Rather than hard-coding
-``128/128/16`` everywhere, :func:`get_tiles` resolves tiles in three steps:
+dtype (sublane granularity), the backend — and the *kernel*: the dense-band
+kernels (``fused``/``int8``) contract ``bk·M`` wide, the sparse N:M kernels
+(``sparse``/``sparse_int8``) only ``bk·(P+1)`` wide, so their legal/useful
+``bk`` range is ``M/(P+1)×`` larger under the same contraction-width budget.
+Rather than hard-coding ``128/128/16`` everywhere, :func:`get_tiles`
+resolves tiles in three steps:
 
 1. the **measurement cache** — a JSON file (``~/.cache/kan_sas/
    autotune.json`` by default, override with ``$KAN_SAS_AUTOTUNE_CACHE``)
    holding winners recorded by :func:`autotune`;
-2. the **in-repo defaults table** — shapes we have measured on real
-   hardware (currently the MXU-aligned TPU defaults);
-3. a **shape heuristic** — clamp MXU-friendly tiles to the problem size so
-   small problems don't pay for padding to 128.
+2. the **in-repo defaults table** — per-kernel shapes we have measured
+   (MXU-aligned TPU tiles for the dense-band kernels, decode-shaped tiles
+   for the sparse kernels);
+3. a **per-kernel shape heuristic** — clamp friendly tiles to the problem
+   size so small problems don't pay for padding to 128.
 
 :func:`autotune` times every candidate from :func:`candidate_tiles` with
 the real kernel (interpret mode on CPU, compiled on TPU), records the
 winner under the problem key, and returns a report row that
 ``benchmarks/kan_paths.py`` embeds in ``BENCH_kan_paths.json`` so the tile
 choices are visible in the perf trajectory.
+
+Cache robustness: the JSON is written atomically (unique temp file +
+``os.replace``) so concurrent processes — pytest-xdist, two engines warming
+up — can race without corrupting it; readers get *copies* of the memoised
+cache (mutating a result cannot poison later reads); a corrupt or
+wrong-schema cache file silently falls back to defaults.
 """
 
 from __future__ import annotations
 
+import copy
 import json
 import os
+import tempfile
 import time
 from typing import Callable
 
@@ -36,15 +49,30 @@ CACHE_ENV = "KAN_SAS_AUTOTUNE_CACHE"
 # Sublane granularity per dtype (TPU tiling constraint: second-to-last dim).
 _SUBLANE = {"float32": 8, "bfloat16": 16, "int8": 32, "int32": 8}
 
-# Shapes measured on hardware: (kernel, backend) -> tiles.  The TPU entry is
-# the MXU-native tiling (128-wide output lanes, bk*M ≈ 128 contraction for
-# the default G=5/P=3 grid).
+# Contraction-width budget per grid step (dense-band kernels contract
+# bk·M wide, sparse kernels bk·nnz wide; both are capped by the same
+# budget, which is what gives the sparse kernels their wider bk range).
+_MAX_CONTRACT = 1024
+
+# Shapes measured on hardware / this container: (kernel, backend) -> tiles.
+# The TPU dense-band entry is the MXU-native tiling (128-wide output lanes,
+# bk*M ≈ 128 contraction for the default G=5/P=3 grid).  The sparse entries
+# are decode-shaped: tiny batch tile, bk as wide as the contraction budget
+# allows (the sparse contraction is only bk·(P+1) wide).
 DEFAULTS: dict[tuple[str, str], Tiles] = {
     ("fused", "tpu"): (128, 128, 16),
     ("int8", "tpu"): (128, 128, 16),
     ("fused", "cpu"): (64, 64, 8),
     ("int8", "cpu"): (64, 64, 8),
+    ("sparse", "tpu"): (8, 128, 128),
+    ("sparse_int8", "tpu"): (8, 128, 128),
+    ("sparse", "cpu"): (8, 256, 256),
+    ("sparse_int8", "cpu"): (8, 256, 256),
 }
+
+
+def is_sparse_kernel(kernel: str) -> bool:
+    return kernel.startswith("sparse")
 
 
 def cache_path() -> str:
@@ -61,6 +89,7 @@ _mem_cache: dict[tuple[str, int], dict] = {}
 
 
 def _load_cache() -> dict:
+    """Parsed cache contents; always a fresh copy (callers may mutate)."""
     path = cache_path()
     try:
         mtime = os.stat(path).st_mtime_ns
@@ -70,21 +99,38 @@ def _load_cache() -> dict:
     if key not in _mem_cache:
         try:
             with open(path) as f:
-                _mem_cache.clear()     # at most one live entry
-                _mem_cache[key] = json.load(f)
+                parsed = json.load(f)
         except (OSError, ValueError):
+            return {}  # unreadable / corrupt (e.g. torn write): use defaults
+        if not isinstance(parsed, dict):
             return {}
-    return _mem_cache[key]
+        _mem_cache.clear()     # at most one live entry
+        _mem_cache[key] = parsed
+    return copy.deepcopy(_mem_cache[key])
 
 
 def _save_cache(cache: dict) -> None:
+    """Atomic write: unique temp file in the target dir + ``os.replace``.
+
+    A fixed temp name would let two concurrent writers interleave into the
+    same file; ``mkstemp`` gives each writer its own, and ``os.replace`` is
+    atomic on POSIX, so readers only ever see a complete JSON document.
+    """
     path = cache_path()
     try:
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(cache, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        d = os.path.dirname(path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(cache, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
     except OSError:
         pass  # read-only FS: autotuning still works, it just doesn't persist
 
@@ -99,11 +145,28 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+def _contract_unit(kernel: str, M: int, nnz: int | None) -> int:
+    """Per-bk contraction width: M for the dense-band kernels, nnz = P+1
+    for the sparse kernels (default M//2 when the caller can't supply it)."""
+    if is_sparse_kernel(kernel):
+        return max(1, nnz if nnz is not None else M // 2)
+    return M
+
+
 def _heuristic(
-    kernel: str, BS: int, K: int, N: int, M: int, dtype, backend: str
+    kernel: str, BS: int, K: int, N: int, M: int, dtype, backend: str,
+    nnz: int | None = None,
 ) -> Tiles:
-    """MXU-friendly tiles clamped to the problem (padding-aware)."""
+    """Per-kernel friendly tiles clamped to the problem (padding-aware)."""
     sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
+    unit = _contract_unit(kernel, M, nnz)
+    if is_sparse_kernel(kernel):
+        # Decode-shaped: small batch tile; bk as wide as the contraction
+        # budget allows (the narrow bk·(P+1) contraction is the whole point).
+        bb = min(32, _round_up(BS, sub))
+        bn = min(256, _round_up(N, 128 if backend == "tpu" else 32))
+        bk = max(1, min(K, _MAX_CONTRACT // unit))
+        return bb, bn, bk
     bb = min(128, _round_up(BS, sub))
     bn = min(128, _round_up(N, 128 if backend == "tpu" else 32))
     # contraction width bk*M near 128-512 keeps the MXU busy without
@@ -113,15 +176,28 @@ def _heuristic(
 
 
 def candidate_tiles(
-    BS: int, K: int, N: int, M: int, dtype=jax.numpy.float32,
-    backend: str | None = None,
+    kernel: str, BS: int, K: int, N: int, M: int, dtype=jax.numpy.float32,
+    backend: str | None = None, nnz: int | None = None,
 ) -> list[Tiles]:
-    """Deduplicated candidate (bb, bn, bk) tilings for one problem."""
+    """Deduplicated candidate (bb, bn, bk) tilings for one problem.
+
+    The ``bk`` range is capped by the contraction-width budget
+    (``bk·M <= 1024`` dense-band, ``bk·(P+1) <= 1024`` sparse) — the same
+    rule for every kernel, which is what lets the sparse kernels trade
+    their narrower contraction for fewer, wider grid steps.
+    """
     backend = backend or jax.default_backend()
     sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
-    bbs = sorted({min(b, _round_up(BS, sub)) for b in (32, 64, 128, 256)})
-    bns = sorted({min(b, _round_up(N, 8)) for b in (64, 128, 256)})
-    bks = sorted({min(b, K) for b in (4, 8, 16, 32) if b * M <= 1024})
+    unit = _contract_unit(kernel, M, nnz)
+    if is_sparse_kernel(kernel):
+        bbs = sorted({min(b, _round_up(BS, sub)) for b in (8, 16, 32)})
+        bns = sorted({min(b, _round_up(N, 8)) for b in (64, 128, 256)})
+        bk_opts = (16, 32, 64, 128, 256)
+    else:
+        bbs = sorted({min(b, _round_up(BS, sub)) for b in (32, 64, 128, 256)})
+        bns = sorted({min(b, _round_up(N, 8)) for b in (64, 128, 256)})
+        bk_opts = (4, 8, 16, 32, 64, 128)
+    bks = sorted({min(b, K) for b in bk_opts if b * unit <= _MAX_CONTRACT})
     out: list[Tiles] = []
     for bb in bbs:
         for bn in bns:
@@ -131,19 +207,49 @@ def candidate_tiles(
     return out
 
 
+def _valid_tiles(hit) -> Tiles | None:
+    """Schema-check one cache entry; malformed entries fall through to the
+    defaults instead of raising."""
+    if not isinstance(hit, dict):
+        return None
+    tiles = hit.get("tiles")
+    if (
+        isinstance(tiles, (list, tuple))
+        and len(tiles) == 3
+        and all(isinstance(t, int) and t > 0 for t in tiles)
+    ):
+        return tuple(tiles)  # type: ignore[return-value]
+    return None
+
+
 def get_tiles(
     kernel: str, BS: int, K: int, N: int, M: int,
     dtype=jax.numpy.float32, backend: str | None = None,
+    nnz: int | None = None,
 ) -> Tiles:
     """Resolve tiles: measurement cache -> defaults table -> heuristic."""
     backend = backend or jax.default_backend()
     key = problem_key(kernel, BS, K, N, M, dtype, backend)
-    hit = _load_cache().get(key)
+    hit = _valid_tiles(_load_cache().get(key))
     if hit:
-        return tuple(hit["tiles"])  # type: ignore[return-value]
-    if min(BS, N) >= 128 and (kernel, backend) in DEFAULTS:
-        return DEFAULTS[(kernel, backend)]
-    return _heuristic(kernel, BS, K, N, M, dtype, backend)
+        return hit
+    if (kernel, backend) in DEFAULTS:
+        use = (
+            BS <= 32 and N >= 128          # sparse defaults: decode-shaped,
+            if is_sparse_kernel(kernel)    # apply in the regime measured
+            else min(BS, N) >= 128
+        )
+        if use:
+            # Clamp to the problem so small-K (or N just over the gate)
+            # shapes don't pay large padding multiples.
+            sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
+            bb, bn, bk = DEFAULTS[(kernel, backend)]
+            return (
+                min(bb, _round_up(BS, sub)),
+                min(bn, _round_up(N, 8)),
+                min(bk, K),
+            )
+    return _heuristic(kernel, BS, K, N, M, dtype, backend, nnz)
 
 
 def _time_call(fn: Callable[[], jax.Array], iters: int) -> float:
@@ -156,6 +262,23 @@ def _time_call(fn: Callable[[], jax.Array], iters: int) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def record_winner(
+    kernel: str, BS: int, K: int, N: int, M: int, dtype, backend: str,
+    tiles: Tiles, us: float,
+) -> str:
+    """Write one measured winner into the cache (atomic, see _save_cache).
+
+    For callers that time candidates themselves (e.g. the benchmark's
+    interleaved fused-vs-sparse sweep) but still want ``get_tiles`` to hand
+    the winner to every later ``ops.py`` call.  Returns the problem key.
+    """
+    key = problem_key(kernel, BS, K, N, M, dtype, backend)
+    cache = _load_cache()
+    cache[key] = {"tiles": list(tiles), "us": round(float(us), 1)}
+    _save_cache(cache)
+    return key
+
+
 def autotune(
     kernel: str,
     run: Callable[[int, int, int], jax.Array],
@@ -164,6 +287,7 @@ def autotune(
     backend: str | None = None,
     iters: int = 3,
     candidates: list[Tiles] | None = None,
+    nnz: int | None = None,
 ) -> dict:
     """Time every candidate tiling of ``run(bb, bn, bk)``, cache the winner.
 
@@ -172,7 +296,7 @@ def autotune(
     """
     backend = backend or jax.default_backend()
     key = problem_key(kernel, BS, K, N, M, dtype, backend)
-    cands = candidates or candidate_tiles(BS, K, N, M, dtype, backend)
+    cands = candidates or candidate_tiles(kernel, BS, K, N, M, dtype, backend, nnz)
     timings: dict[str, float] = {}
     best: Tiles | None = None
     best_us = float("inf")
@@ -185,7 +309,7 @@ def autotune(
         if us < best_us:
             best, best_us = tiles, us
     if best is None:
-        best = get_tiles(kernel, BS, K, N, M, dtype, backend)
+        best = get_tiles(kernel, BS, K, N, M, dtype, backend, nnz)
         best_us = float("nan")
     cache = _load_cache()
     cache[key] = {"tiles": list(best), "us": round(best_us, 1)}

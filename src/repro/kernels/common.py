@@ -9,9 +9,17 @@ branch-free vector code:
   (:func:`compact_basis_inblock`, :func:`cardinal_values_inblock`);
 * the M-to-N multiplexer run in reverse (§IV-B): place those compact values
   into the dense ``M = G+P`` band of an MXU tile with compare-selects — no
-  gathers, no scatters (:func:`band_scatter`).
+  gathers, no scatters (:func:`band_scatter`);
+* the M-to-N multiplexer run *forward* (§IV-B, the N:M vector PE of the
+  sparse kernels): gather, per input, the ``(P+1, N)`` coefficient slab its
+  non-zero basis values touch (:func:`gather_coeff_slabs`);
+* the integer Align/Compare units + ROM-free table fetch of the int8
+  datapath (Eq. 5), shared by the dense-band and sparse int8 kernels
+  (:func:`int8_compact_values_inblock`).
 
-Everything here lowers inside a TPU kernel: only iota / where / arithmetic.
+Everything here lowers inside a TPU kernel with iota / where / arithmetic,
+except :func:`gather_coeff_slabs`, which is a VMEM gather (plain XLA ops in
+interpret mode; requires Mosaic dynamic-gather support when compiled).
 """
 
 from __future__ import annotations
@@ -95,3 +103,53 @@ def band_scatter(vals: jax.Array, k: jax.Array, M: int) -> jax.Array:
     for i in range(P + 1):
         band = band + jnp.where(rel == i, vals[..., i][..., None], zero)
     return band
+
+
+def gather_coeff_slabs(c: jax.Array, k: jax.Array, P: int) -> jax.Array:
+    """The M-to-N multiplexer run *forward* (paper §IV-B, the N:M vector PE).
+
+    ``c: (bk, M, bn)`` coefficient block, ``k: (bb, bk)`` interval indices in
+    ``[P, M-1]`` -> ``(bb, bk, P+1, bn)``: per input, the coefficient slab
+    ``C[j, k-P .. k, :]`` its ``P+1`` non-zero basis values touch (ascending
+    basis index, matching :func:`cardinal_values_inblock`).  This is the
+    select-by-``k`` that lets the sparse kernels contract only ``bk·(P+1)``
+    wide instead of the dense ``bk·M`` band.
+
+    Lowered as one batched gather; XLA fuses the broadcast into it, so no
+    ``(bb, bk, M, bn)`` temporary is materialised.  In interpret mode these
+    are plain XLA ops; compiling on TPU needs Mosaic dynamic-gather support
+    (the sparse kernels are decode-shape kernels — small ``bb·bk`` — by
+    design, see DESIGN.md §2a).
+    """
+    bb, bk = k.shape
+    offs = jax.lax.broadcasted_iota(jnp.int32, k.shape + (P + 1,), k.ndim)
+    idx = (k[..., None] - P) + offs                   # (bb, bk, P+1) in [0, M-1]
+    cb = jnp.broadcast_to(c[None], (bb,) + c.shape)   # fused into the gather
+    return jnp.take_along_axis(cb, idx[..., None], axis=2, mode="clip")
+
+
+def int8_compact_values_inblock(
+    x_q: jax.Array, grid: SplineGrid, S: int, qmax: int, lut_scale: int
+) -> tuple[jax.Array, jax.Array]:
+    """Integer Align + Compare units (paper Eq. 5) + ROM-free table fetch.
+
+    ``x_q: (...,) int32`` activations quantised over the extended domain ->
+    ``(bvals: (..., P+1) int32, k: (...,) int32)``.  The uint8 table entries
+    are by construction ``round(B_{0,P}(addr/(S-1) + c) · lut_scale)``, so
+    the generating function is evaluated directly with the shared
+    compare-select Cox-de Boor code — bit-identical to the direct +
+    inverted-address half-table fetch (tested), no O(S) one-hot matmuls.
+    Shared by the dense-band (``kan_int8_gemm``) and sparse
+    (``kan_sparse_gemm``) integer kernels.
+    """
+    P, M = grid.P, grid.n_basis
+    u = (grid.G + 2 * P) * x_q
+    k = jnp.clip(u // qmax, P, M - 1)
+    addr = jnp.clip(u - qmax * k, 0, qmax)
+    addr = (addr * (S - 1)) // qmax
+    xa_q = addr.astype(jnp.float32) / jnp.float32(S - 1)
+    vals = cardinal_values_inblock(xa_q, P)           # f32 (..., P+1)
+    bvals = jnp.clip(
+        jnp.round(vals * jnp.float32(lut_scale)), 0.0, 255.0
+    ).astype(jnp.int32)
+    return bvals, k

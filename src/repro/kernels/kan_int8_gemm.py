@@ -38,7 +38,7 @@ from repro.core.bspline import SplineGrid
 from repro.kernels.common import (
     CompilerParams,
     band_scatter,
-    cardinal_values_inblock,
+    int8_compact_values_inblock,
 )
 
 
@@ -50,23 +50,12 @@ def _int8_kernel(
     else:
         xq_ref, cq_ref, y_ref, acc_ref = refs
         scale_ref = None
-    P, M = grid.P, grid.n_basis
+    M = grid.n_basis
     x_q = xq_ref[...].astype(jnp.int32)               # (bb, bk)
 
-    # Integer Align + Compare units (paper Eq. 5).
-    u = (grid.G + 2 * P) * x_q
-    k = jnp.clip(u // qmax, P, M - 1)
-    addr = jnp.clip(u - qmax * k, 0, qmax)
-    addr = (addr * (S - 1)) // qmax
-
-    # ROM-free fetch: evaluate the table's generating function at the
-    # quantised offset and round — bit-identical to the uint8 half-table
-    # (see module docstring), no O(S) one-hot matmuls.
-    xa_q = addr.astype(jnp.float32) / jnp.float32(S - 1)
-    vals = cardinal_values_inblock(xa_q, P)           # f32 (bb, bk, P+1)
-    bvals = jnp.clip(
-        jnp.round(vals * jnp.float32(lut_scale)), 0.0, 255.0
-    ).astype(jnp.int32)
+    # Integer Align + Compare (Eq. 5) + ROM-free fetch (shared with the
+    # sparse int8 kernel): bit-identical to the uint8 half-table.
+    bvals, k = int8_compact_values_inblock(x_q, grid, S, qmax, lut_scale)
 
     # Dense-band scatter (the M-to-N mux in reverse) + int32 MXU GEMM.
     band = band_scatter(bvals, k, M)                  # (bb, bk, M) int32

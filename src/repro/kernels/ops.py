@@ -21,15 +21,16 @@ from repro.kernels import autotune as _tune
 from repro.kernels import bspline_lut as _lut
 from repro.kernels import kan_fused_gemm as _fused
 from repro.kernels import kan_int8_gemm as _int8
+from repro.kernels import kan_sparse_gemm as _sparse
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _resolve_tiles(kernel, BS, K, N, M, dtype, bb, bn, bk):
+def _resolve_tiles(kernel, BS, K, N, M, dtype, bb, bn, bk, nnz=None):
     if bb is None or bn is None or bk is None:
-        tb, tn, tk = _tune.get_tiles(kernel, BS, K, N, M, dtype)
+        tb, tn, tk = _tune.get_tiles(kernel, BS, K, N, M, dtype, nnz=nnz)
         bb, bn, bk = bb or tb, bn or tn, bk or tk
     return bb, bn, bk
 
@@ -67,6 +68,69 @@ def kan_fused_gemm(
         interpret=interpret,
     )
     return y.reshape(lead + (coeff.shape[-1],))
+
+
+def kan_sparse_gemm(
+    x: jax.Array, coeff: jax.Array, grid: SplineGrid,
+    base_w: jax.Array | None = None,
+    bb: int | None = None, bn: int | None = None, bk: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Compact N:M sparse KAN layer (paper §IV-A): each input contracts only
+    its ``P+1`` non-zero basis values against a gathered ``(P+1, N)``
+    coefficient slab — ``(G+P)/(P+1)×`` fewer MACs and coefficient reads
+    than the dense-band fused kernel.  Spline + optional base term in ONE
+    ``pallas_call``; the decode/small-batch serving path (DESIGN.md §2a).
+
+    Accepts ``x`` of shape ``(..., K)``; leading dims are flattened.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    BS, K = x2.shape
+    N, M = coeff.shape[-1], grid.n_basis
+    bb, bn, bk = _resolve_tiles(
+        "sparse", BS, K, N, M, x.dtype, bb, bn, bk, nnz=grid.n_nonzero
+    )
+    y = _sparse.kan_sparse_gemm_pallas(
+        x2, coeff, grid, base_w=base_w, bb=bb, bn=bn, bk=bk,
+        interpret=interpret,
+    )
+    return y.reshape(lead + (coeff.shape[-1],))
+
+
+def kan_sparse_int8_gemm(
+    x_q: jax.Array, lut_u8: jax.Array, coeff_q: jax.Array, grid: SplineGrid,
+    scale: jax.Array | None = None,
+    bb: int | None = None, bn: int | None = None, bk: int | None = None,
+    qmax: int = 255,
+    lut_scale: int | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Integer sparse KAN GEMM — same contract as :func:`kan_int8_gemm`
+    (bit-identical accumulator, same fused dequant epilogue), but the N:M
+    sparse datapath: gathered int8 coefficient slabs instead of the dense
+    band.  The int8 decode/small-batch path.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if lut_scale is None:
+        lut_scale = _int8.resolve_lut_scale(lut_u8, grid, lut_u8.shape[0])
+    lead = x_q.shape[:-1]
+    x2 = x_q.reshape(-1, x_q.shape[-1])
+    BS, K = x2.shape
+    N, M = coeff_q.shape[-1], grid.n_basis
+    bb, bn, bk = _resolve_tiles(
+        "sparse_int8", BS, K, N, M, jnp.int8, bb, bn, bk, nnz=grid.n_nonzero
+    )
+    y = _sparse.kan_sparse_int8_gemm_pallas(
+        x2, coeff_q, grid, scale=scale, bb=bb, bn=bn, bk=bk, qmax=qmax,
+        S=lut_u8.shape[0], lut_scale=lut_scale,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return y.reshape(lead + (coeff_q.shape[-1],))
 
 
 def kan_int8_gemm(

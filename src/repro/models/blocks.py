@@ -72,9 +72,10 @@ def _kan_ffn(
     """Two spline layers d -> ff -> d.
 
     ``method="dense"`` is the differentiable training path; inference
-    callers (prefill/decode) pass :func:`KL.resolve_inference_method` —
-    the fused Pallas kernel on TPU (spline + base in one ``pallas_call``
-    per layer), ``compact`` elsewhere.
+    callers (prefill/decode) pass ``method="auto"``, which resolves per
+    backend AND batch regime (``KL.resolve_inference_method``): on TPU the
+    sparse N:M kernel at decode row counts, the fused kernel for
+    prefill/large batch; ``compact`` elsewhere.
     """
     lead = x.shape[:-1]
     xf = jnp.tanh(x.reshape(-1, x.shape[-1]))   # squash into the spline domain
@@ -229,9 +230,9 @@ def block_prefill(
             y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
             x = x + y2
         else:
-            # inference path: fused Pallas kernel on TPU, compact elsewhere
-            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid,
-                             method=KL.resolve_inference_method())
+            # inference path, batch-regime aware: fused Pallas kernel on TPU
+            # at prefill row counts, sparse at decode, compact elsewhere
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid, method="auto")
         return x, cache
     if blk.kind == "mamba2":
         y, st = S.mamba2_forward(params["mamba"], blk.mamba, h, return_state=True)
@@ -305,9 +306,9 @@ def block_decode_step(
             y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
             x = x + y2
         else:
-            # inference path: fused Pallas kernel on TPU, compact elsewhere
-            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid,
-                             method=KL.resolve_inference_method())
+            # inference path, batch-regime aware: decode sees B·1 rows, so
+            # "auto" resolves to the sparse N:M kernel on TPU
+            x = x + _kan_ffn(params["kan"], h2, blk.kan_grid, method="auto")
         return x, cache
     if blk.kind == "mamba2":
         y, cache = S.mamba2_decode_step(params["mamba"], blk.mamba, h, cache)

@@ -13,6 +13,25 @@ bucket granularity).
 ``serve_requests`` buckets requests by prompt length before batching, so a
 mixed-length request list pads each bucket to its own max instead of the
 global max (DESIGN.md §3).
+
+Padding is **right**-padding with per-request start offsets: real tokens
+sit at positions ``0..len-1``, causal attention means no real token ever
+attends a pad, each request samples from the logits at its *own* last real
+position, and decode starts ragged at ``pos_b = len_b`` (overwriting pad
+cache slots before they become attendable).  Under greedy decoding
+(``temperature == 0``, the default) a request's generation is therefore
+invariant to its batch-mates and to the amount of padding
+(regression-tested); with ``temperature > 0`` the *logits* are still
+pad-invariant, but the sampling noise is drawn from one PRNG key over the
+whole batch, so sampled tokens depend on bucket composition.  The previous
+revision left-padded and attended the pads unmasked — even the logits
+changed with bucket composition.  Caveat: ragged
+decode into *windowed* (ring-buffer) attention layers can still attend
+stale pad slots once a row's position wraps the window; the KAN serving
+configs use full attention, where the invariance is exact.  SSM/LSTM block
+states are sequential and not pad-invariant under any padding scheme;
+equal-length buckets (the common case after length bucketing) avoid
+padding entirely.
 """
 
 from __future__ import annotations
@@ -84,16 +103,42 @@ class Engine:
         )
         return toks, caches   # toks: (steps, B)
 
-    def generate(self, prompts: np.ndarray, seed: int = 0) -> np.ndarray:
-        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens) int32."""
+    def generate(
+        self,
+        prompts: np.ndarray,
+        seed: int = 0,
+        lengths: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens) int32.
+
+        ``lengths`` (optional, (B,)): true prompt lengths for right-padded
+        prompts.  Each row then samples from the logits at its own last real
+        token and decodes from its own start offset — generation is
+        invariant to batch-mates and padding (module docstring).  Without
+        ``lengths`` every row is taken as full-length (synchronized decode,
+        collective-free scalar-position cache writes).
+        """
         B, T = prompts.shape
         assert T + self.cfg.max_new_tokens <= self.cfg.max_seq
         logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
         key = jax.random.PRNGKey(seed)
         key, k0 = jax.random.split(key)
-        tok = self._sample(logits[:, T - 1], k0)[:, None]
-        # synchronized decode (scalar position): collective-free cache writes
-        pos = jnp.asarray(T, jnp.int32)
+        if lengths is None:
+            last = logits[:, T - 1]
+            # synchronized decode (scalar position): collective-free writes
+            pos = jnp.asarray(T, jnp.int32)
+        else:
+            lengths = np.asarray(lengths, np.int32)
+            assert lengths.shape == (B,), (lengths.shape, B)
+            assert lengths.min() >= 1 and lengths.max() <= T
+            last = jnp.take_along_axis(
+                logits, jnp.asarray(lengths - 1)[:, None, None], axis=1
+            )[:, 0]
+            # ragged decode: per-row start offsets; each row's first write
+            # lands at slot len_b, overwriting the pad K/V before any mask
+            # ever exposes it
+            pos = jnp.asarray(lengths, jnp.int32)
+        tok = self._sample(last, k0)[:, None]
         steps = self.cfg.max_new_tokens - 1
         if self.cfg.decode_impl == "scan":
             toks, _ = self._decode_scan(steps, self.params, tok, caches, pos, key)
@@ -115,19 +160,28 @@ class Engine:
         """Bucket requests BY LENGTH into fixed batches (pad with copies) and
         drain bucket by bucket — the batched-serving driver used by
         examples/serve_kan.py.  Length-sorting means each bucket pads to its
-        own max prompt length, not the global max."""
+        own max prompt length, not the global max.  Mixed-length buckets
+        RIGHT-pad and thread the true lengths through ``generate``, so a
+        request's output never depends on its batch-mates or the padding;
+        equal-length buckets (the common case after sorting) skip the
+        length plumbing and keep the synchronized scalar-position decode."""
         order = sorted(range(len(requests)), key=lambda i: requests[i].shape[0])
         results: list[np.ndarray | None] = [None] * len(requests)
         for bi, start in enumerate(range(0, len(order), batch_size)):
             idxs = order[start : start + batch_size]
             bucket = [requests[i] for i in idxs]
             T = max(r.shape[0] for r in bucket)
+            lens = np.asarray([r.shape[0] for r in bucket], np.int32)
             padded = np.stack(
-                [np.pad(r, (T - r.shape[0], 0), constant_values=0) for r in bucket]
+                [np.pad(r, (0, T - r.shape[0]), constant_values=0) for r in bucket]
             )
             while padded.shape[0] < batch_size:
                 padded = np.concatenate([padded, padded[-1:]], axis=0)
-            gen = self.generate(padded.astype(np.int32), seed=seed + bi)
+                lens = np.concatenate([lens, lens[-1:]], axis=0)
+            gen = self.generate(
+                padded.astype(np.int32), seed=seed + bi,
+                lengths=None if bool((lens == T).all()) else lens,
+            )
             for j, i in enumerate(idxs):
                 results[i] = gen[j]
         return results  # type: ignore[return-value]

@@ -1,0 +1,172 @@
+"""Boundary-value suite (PR acceptance criteria):
+
+* every evaluation path — dense oracle, ``compact_basis``, LUT, fused
+  kernel, int8 kernel, sparse kernel, sparse int8 kernel — agrees at
+  ``x_min``, ``x_max``, interior knot points, and out-of-domain inputs
+  (shared convention: Eq. 5 saturation);
+* the basis at exactly ``x = x_max`` is non-zero and identical across
+  paths (the half-open-interval all-zero regression);
+* clamped (repeated-end-knot) non-uniform refits are no longer corrupted
+  at the right edge;
+* ``refit_coefficients`` survives bf16 coefficients (fp32-promoted solve).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bspline as bs
+from repro.core import grid as gr
+from repro.core import kan_layer as kl
+from repro.core import quantization as q
+from repro.core.bspline import SplineGrid
+
+GRIDS = [(5, 3), (3, 2), (10, 3), (2, 1), (4, 4)]
+
+
+def _boundary_points(g: SplineGrid) -> np.ndarray:
+    """x_min, x_max, every interior knot, and out-of-domain on both sides."""
+    interior = g.knots()[g.P : g.n_basis + 1]      # x_min .. x_max inclusive
+    span = g.x_max - g.x_min
+    return np.concatenate(
+        [interior, [g.x_min - 0.5 * span, g.x_max + 0.5 * span,
+                    g.x_min - 5 * span, g.x_max + 5 * span]]
+    ).astype(np.float32)
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_basis_nonzero_and_unit_at_xmax(G, P):
+    """The endpoint regression: the dense oracle at x == x_max is a valid
+    partition-of-unity row (was structurally dependent on extension
+    intervals; all-zero for clamped knots)."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    row = np.asarray(bs.cox_de_boor_dense(jnp.asarray([g.x_max], jnp.float32), g))[0]
+    assert row.max() > 0.1, row
+    np.testing.assert_allclose(row.sum(), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_all_basis_paths_agree_at_boundaries(G, P):
+    """dense == compact == LUT (dense-scattered) at endpoints, knots and
+    out-of-domain points — one saturation convention everywhere."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    x = jnp.asarray(_boundary_points(g))
+    dense = np.asarray(bs.cox_de_boor_dense(x, g))
+    np.testing.assert_allclose(dense.sum(-1), 1.0, atol=1e-5)
+    vals, k = bs.compact_basis(x, g)
+    np.testing.assert_allclose(
+        np.asarray(bs.compact_to_dense(vals, k, g)), dense, atol=1e-5
+    )
+    lut = jnp.asarray(bs.build_lut(P, 4096))
+    assert float(jnp.abs(bs.lut_basis_dense(x, g, lut) - dense).max()) < 2e-3
+
+
+@pytest.mark.parametrize("G,P", GRIDS)
+def test_kernel_paths_agree_at_boundaries(G, P):
+    """Layer outputs: dense oracle vs fused and sparse Pallas kernels on the
+    boundary points (same clamp semantics inside the kernels)."""
+    g = SplineGrid(-1.0, 1.0, G, P)
+    K, N = 7, 9
+    params = kl.init_kan_layer(jax.random.PRNGKey(0), kl.KANLayerConfig(K, N, g))
+    pts = _boundary_points(g)
+    x = jnp.asarray(np.stack([np.roll(pts, j) for j in range(K)], axis=1))
+    ref = kl.kan_layer_apply(params, x, g, "dense")
+    for method in ("compact", "fused", "sparse"):
+        got = kl.kan_layer_apply(params, x, g, method)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4,
+            err_msg=f"method={method} G={G} P={P}",
+        )
+
+
+@pytest.mark.parametrize("G,P", [(5, 3), (3, 2)])
+def test_int8_paths_agree_at_boundaries(G, P):
+    """Integer paths at the boundary points: dense-band and sparse int8
+    kernels are bit-identical, and both track the float oracle within
+    quantisation error."""
+    from repro.kernels import ops as kops
+
+    g = SplineGrid(-1.0, 1.0, G, P)
+    K, N = 6, 8
+    rs = np.random.RandomState(0)
+    pts = _boundary_points(g)
+    x = jnp.asarray(np.stack([np.roll(pts, j) for j in range(K)], axis=1))
+    qg = q.QuantizedGrid.make(g)
+    x_q = qg.x_quant.quantize(x)
+    lut_u8 = jnp.asarray(q.build_lut_u8(P, 256))
+    cq = jnp.asarray(rs.randint(-127, 128, (K, g.n_basis, N)).astype(np.int8))
+    y_band = kops.kan_int8_gemm(x_q, lut_u8, cq, g, bb=8, bn=8, bk=4)
+    y_sparse = kops.kan_sparse_int8_gemm(x_q, lut_u8, cq, g, bb=8, bn=8, bk=4)
+    np.testing.assert_array_equal(np.asarray(y_band), np.asarray(y_sparse))
+    # both track the float spline term within quantisation error (the
+    # oracle saturates out-of-domain inputs the same way the address
+    # arithmetic does)
+    ref = jnp.einsum(
+        "bkm,kmn->bn", bs.cox_de_boor_dense(x, g), cq.astype(jnp.float32)
+    )
+    got = y_band.astype(jnp.float32) / qg.lut_scale
+    scale = float(jnp.abs(ref).max()) + 1e-9
+    assert float(jnp.abs(got - ref).max()) / scale < 5e-2
+
+
+def test_clamped_nonuniform_refit_right_edge():
+    """Clamped (repeated end-knot) vectors: the basis row at x_max used to
+    be all-zero, corrupting the lstsq targets. The refit must now
+    reproduce the spline up to AND INCLUDING the right edge."""
+    P, G_old = 3, 5
+    kn = np.concatenate(
+        [np.full(P, -1.0), np.linspace(-1, 1, G_old + 1), np.full(P, 1.0)]
+    )
+    rs = np.random.RandomState(0)
+    coeff = jnp.asarray(rs.randn(2, G_old + P, 3).astype(np.float32))
+    new_grid, new_coeff = gr.nonuniform_to_uniform(kn, coeff, P, 20, n_samples=256)
+
+    # reference: exact clamped-basis evaluation at probe points (scipy-free
+    # Cox-de Boor with the closed right edge)
+    def clamped_basis(xs):
+        b = np.where(
+            (xs[:, None] >= kn[None, :-1]) & (xs[:, None] < kn[None, 1:]), 1.0, 0.0
+        )
+        dom = np.where((kn[:-1] < kn[1:]) & (kn[1:] <= 1.0 + 1e-12))[0]
+        last = int(dom.max())
+        edge = xs >= kn[last + 1]
+        b[edge] = 0.0
+        b[edge, last] = 1.0
+        for p in range(1, P + 1):
+            nb = np.zeros((len(xs), b.shape[1] - 1))
+            for i in range(b.shape[1] - 1):
+                d1, d2 = kn[i + p] - kn[i], kn[i + p + 1] - kn[i + 1]
+                left = ((xs - kn[i]) / d1) * b[:, i] if d1 > 0 else 0.0
+                right = ((kn[i + p + 1] - xs) / d2) * b[:, i + 1] if d2 > 0 else 0.0
+                nb[:, i] = left + right
+            b = nb
+        return b[:, : G_old + P]
+
+    probe = np.linspace(-1.0, 1.0, 41)
+    f_ref = np.einsum("sm,kmn->skn", clamped_basis(probe), np.asarray(coeff))
+    B_new = np.asarray(bs.cox_de_boor_dense(jnp.asarray(probe, jnp.float32), new_grid))
+    f_new = np.einsum("sm,kmn->skn", B_new, np.asarray(new_coeff))
+    scale = np.abs(f_ref).max() + 1e-9
+    err = np.abs(f_new - f_ref).max() / scale
+    assert err < 5e-2, err
+    # the edge specifically (the previously-corrupted sample)
+    edge_err = np.abs(f_new[-1] - f_ref[-1]).max() / scale
+    assert edge_err < 5e-2, edge_err
+
+
+def test_refit_bf16_coefficients():
+    """The lstsq solve is fp32-promoted: a bf16 refit must land within bf16
+    resolution of the fp32 refit (previously garbage-or-unsupported)."""
+    g = SplineGrid(-1.0, 1.0, 5, 3)
+    g2 = gr.refine_grid(g, 2)
+    rs = np.random.RandomState(0)
+    c32 = jnp.asarray(rs.randn(3, g.n_basis, 4).astype(np.float32))
+    ref = gr.refit_coefficients(c32, g, g2, n_samples=128)
+    c16 = c32.astype(jnp.bfloat16)
+    got = gr.refit_coefficients(c16, g, g2, n_samples=128)
+    assert got.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(got.astype(jnp.float32))))
+    scale = float(jnp.abs(ref).max()) + 1e-9
+    err = float(jnp.abs(got.astype(jnp.float32) - ref).max()) / scale
+    assert err < 5e-2, err
