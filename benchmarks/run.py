@@ -4,10 +4,11 @@ Prints ``name,us_per_call,derived`` CSV (brief deliverable (d)) and writes
 ``BENCH_kan_paths.json`` (µs per KAN path + modeled HBM bytes + autotuned
 tile choices) so future PRs have a perf trajectory to compare against.
 
-``--smoke`` runs only the kanpaths suite at reduced shapes (sets
-``$KAN_SAS_BENCH_SMOKE=1``) and *fails* unless the written JSON carries the
-sparse-path rows — the CI gate that keeps the N:M sparse datapath in the
-perf trajectory."""
+``--smoke`` runs the kanpaths and serving suites at reduced shapes (sets
+``$KAN_SAS_BENCH_SMOKE=1``) and *fails* unless the written JSONs carry the
+sparse-path rows (``BENCH_kan_paths.json``) and the continuous-engine rows
+(``BENCH_serve.json``) — the CI gates that keep the N:M sparse datapath and
+the continuous-batching engine in the perf trajectory."""
 
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ import traceback
 
 KAN_PATHS_JSON = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_kan_paths.json")
+SERVE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 
 def _check_sparse_rows(rep: dict) -> list[str]:
@@ -36,6 +38,25 @@ def _check_sparse_rows(rep: dict) -> list[str]:
     return problems
 
 
+def _check_serve_rows(rep: dict) -> list[str]:
+    """The continuous-engine rows every serving report must carry (CI smoke
+    gate): without them the perf trajectory silently loses the
+    static-vs-continuous comparison."""
+    problems = []
+    engines = rep.get("engines", {})
+    for eng in ("static", "continuous"):
+        if eng not in engines:
+            problems.append(f"engines.{eng} missing")
+            continue
+        for key in ("tokens_per_s", "mean_slot_utilization",
+                    "p50_latency_s", "p95_latency_s"):
+            if key not in engines[eng]:
+                problems.append(f"engines.{eng}.{key} missing")
+    if "continuous_speedup_tokens_per_s" not in rep:
+        problems.append("continuous_speedup_tokens_per_s missing")
+    return problems
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -49,6 +70,7 @@ def main() -> None:
         quant_accuracy,
         roofline,
         sa_sweep,
+        serve_bench,
         workloads,
     )
 
@@ -60,10 +82,11 @@ def main() -> None:
         ("tableII", workloads),
         ("quant", quant_accuracy),
         ("kanpaths", kan_paths),
+        ("serve", serve_bench),
         ("roofline", roofline),
     ]
     if smoke:
-        suites = [("kanpaths", kan_paths)]
+        suites = [("kanpaths", kan_paths), ("serve", serve_bench)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in suites:
@@ -73,19 +96,25 @@ def main() -> None:
         except Exception:
             failures += 1
             print(f"{name}.ERROR,0,{traceback.format_exc(limit=1)!r}")
-    rep = getattr(kan_paths.run, "last_report", None)
-    if rep is not None:
-        out = os.path.abspath(KAN_PATHS_JSON)
-        with open(out, "w") as f:
-            json.dump(rep, f, indent=2)
-        print(f"# wrote {out}")
-        missing = _check_sparse_rows(rep)
-        if missing:
+    gates = [
+        (kan_paths, KAN_PATHS_JSON, _check_sparse_rows, "SPARSE"),
+        (serve_bench, SERVE_JSON, _check_serve_rows, "SERVE"),
+    ]
+    for mod, json_path, checker, label in gates:
+        rep = getattr(mod.run, "last_report", None)
+        if rep is not None:
+            out = os.path.abspath(json_path)
+            with open(out, "w") as f:
+                json.dump(rep, f, indent=2)
+            print(f"# wrote {out}")
+            missing = checker(rep)
+            if missing:
+                failures += 1
+                print(f"# {label} ROWS MISSING: {missing}")
+        elif smoke:
             failures += 1
-            print(f"# SPARSE ROWS MISSING: {missing}")
-    elif smoke:
-        failures += 1
-        print("# kanpaths produced no report — BENCH_kan_paths.json not written")
+            print(f"# {mod.__name__} produced no report — "
+                  f"{os.path.basename(json_path)} not written")
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,155 @@
+"""Serving benchmark: static bucket draining vs slot-level continuous
+batching on a *skewed output-length* workload — the regime where the static
+engine's idle-slot problem (the software analogue of the paper's idle-PE
+problem) is worst.
+
+Workload: mixed prompt lengths, per-request token budgets drawn from a
+skewed mixture (most requests want a few tokens, a minority want the full
+``max_new``).  The static engine must drain every bucket to the global
+``max_new`` — short requests keep decoding into dead slots — while the
+continuous engine retires a slot the moment its budget is met and admits
+the next queued request at the following chunk boundary.
+
+Reported per engine (``BENCH_serve.json``, written by ``benchmarks/run.py``):
+useful tokens/s, mean slot utilization (useful token-steps over slot x step
+capacity), and p50/p95 request latency.  Wall-clock on this host swings
+2-3x run to run, so engines are timed interleaved best-of-repeats; the
+utilization numbers are *counted* from the schedule and are deterministic.
+
+``$KAN_SAS_BENCH_SMOKE=1`` shrinks the request count and budgets for CI.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _smoke() -> bool:
+    return os.environ.get("KAN_SAS_BENCH_SMOKE", "") not in ("", "0")
+
+
+def _workload():
+    """Skewed regime: most requests want a handful of tokens, the minority
+    want a long tail.  ``max_new`` is deliberately deep — bucket draining
+    costs the static engine ``max_new`` steps *per row* regardless of
+    budget, which is exactly the waste continuous batching reclaims (and
+    the regime real decode serving lives in; at trivial depths per-dispatch
+    host overhead hides the effect on this CPU host)."""
+    if _smoke():
+        return dict(n_requests=8, batch=2, max_new=8, short=(1, 3),
+                    prompt_lo=4, prompt_hi=10, chunk_steps=2, reps=2)
+    return dict(n_requests=24, batch=4, max_new=48, short=(1, 4),
+                prompt_lo=4, prompt_hi=16, chunk_steps=8, reps=3)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _static_utilization(n_requests, batch, budgets, max_new):
+    """Counted, not timed: every bucket row (including duplicate-padded
+    rows) decodes ``max_new`` tokens; only each request's budget is kept."""
+    n_buckets = -(-n_requests // batch)
+    return float(sum(budgets)) / float(n_buckets * batch * max_new)
+
+
+def run() -> list[tuple[str, float, str]]:
+    from repro import configs
+    from repro.models import lm
+    from repro.serve.engine import Engine, ServeConfig
+
+    w = _workload()
+    arch = configs.get_reduced("qwen1.5-0.5b")
+    rs = np.random.RandomState(0)
+    requests = [
+        rs.randint(0, arch.model.vocab,
+                   rs.randint(w["prompt_lo"], w["prompt_hi"] + 1)).astype(np.int32)
+        for _ in range(w["n_requests"])
+    ]
+    # skewed budgets: 75% short, 25% want the full max_new
+    budgets = [
+        int(rs.randint(w["short"][0], w["short"][1] + 1))
+        if rs.rand() < 0.75 else w["max_new"]
+        for _ in range(w["n_requests"])
+    ]
+    params = lm.init_params(jax.random.PRNGKey(0), arch.model)
+    eng = Engine(params, arch.model, ServeConfig(
+        max_seq=w["prompt_hi"] + w["max_new"] + 8,
+        max_new_tokens=w["max_new"],
+    ))
+    useful = float(sum(budgets))
+
+    def run_static():
+        eng.serve_requests(requests, batch_size=w["batch"], seed=0)
+        return dict(eng.last_serve_stats)
+
+    def run_continuous():
+        eng.serve_continuous(requests, slots=w["batch"],
+                             chunk_steps=w["chunk_steps"], seed=0,
+                             max_new=budgets)
+        return dict(eng.last_serve_stats)
+
+    # warm every jitted shape once, then interleave timed repeats and keep
+    # the best wall per engine (host timings swing 2-3x run to run)
+    run_static(), run_continuous()
+    st, ct = None, None
+    for _ in range(w["reps"]):
+        s, c = run_static(), run_continuous()
+        if st is None or s["wall_s"] < st["wall_s"]:
+            st = s
+        if ct is None or c["wall_s"] < ct["wall_s"]:
+            ct = c
+
+    static_row = {
+        "wall_s": st["wall_s"],
+        "useful_tokens": useful,
+        "tokens_per_s": useful / st["wall_s"],
+        "mean_slot_utilization": _static_utilization(
+            w["n_requests"], w["batch"], budgets, w["max_new"]),
+        "p50_latency_s": _percentile(st["request_latency_s"], 50),
+        "p95_latency_s": _percentile(st["request_latency_s"], 95),
+        "batch": w["batch"],
+    }
+    cont_row = {
+        "wall_s": ct["wall_s"],
+        "useful_tokens": useful,
+        "tokens_per_s": useful / ct["wall_s"],
+        "mean_slot_utilization": ct["mean_slot_utilization"],
+        "p50_latency_s": _percentile(ct["request_latency_s"], 50),
+        "p95_latency_s": _percentile(ct["request_latency_s"], 95),
+        "slots": w["batch"],
+        "chunk_steps": w["chunk_steps"],
+        "chunks_run": ct["chunks_run"],
+        "n_served": ct["n_served"],
+    }
+    rep = {
+        "workload": {
+            "n_requests": w["n_requests"],
+            "max_new": w["max_new"],
+            "budgets": budgets,
+            "prompt_lens": [int(r.shape[0]) for r in requests],
+            "skew": "75% short / 25% full-budget outputs",
+            "smoke": _smoke(),
+        },
+        "engines": {"static": static_row, "continuous": cont_row},
+        "continuous_speedup_tokens_per_s":
+            cont_row["tokens_per_s"] / static_row["tokens_per_s"],
+        "continuous_utilization_gain":
+            cont_row["mean_slot_utilization"]
+            / static_row["mean_slot_utilization"],
+    }
+    run.last_report = rep  # type: ignore[attr-defined]
+    return [
+        ("serve.static", st["wall_s"] * 1e6,
+         f"tok/s={static_row['tokens_per_s']:.1f} "
+         f"util={static_row['mean_slot_utilization']:.3f}"),
+        ("serve.continuous", ct["wall_s"] * 1e6,
+         f"tok/s={cont_row['tokens_per_s']:.1f} "
+         f"util={cont_row['mean_slot_utilization']:.3f}"),
+        ("serve.speedup", 0.0,
+         f"x{rep['continuous_speedup_tokens_per_s']:.2f} tok/s, "
+         f"x{rep['continuous_utilization_gain']:.2f} utilization"),
+    ]

@@ -1,9 +1,15 @@
-"""Batched serving demo (brief deliverable (b)): serve a small kanformer
-with batched requests through the prefill+decode engine.
+"""Batched serving demo: serve a small kanformer with batched requests
+through the prefill+decode engine.
 
-    PYTHONPATH=src python examples/serve_kan.py
+    PYTHONPATH=src python examples/serve_kan.py                      # static
+    PYTHONPATH=src python examples/serve_kan.py --engine continuous  # slots
+
+``--engine static`` drains length-sorted fixed buckets;
+``--engine continuous`` recycles batch slots the moment a request finishes
+(EOS or budget) — the software analogue of the paper's never-idle PEs.
 """
 
+import argparse
 import time
 
 import jax
@@ -15,7 +21,13 @@ from repro.models import lm
 from repro.serve.engine import Engine, ServeConfig
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
+    ap.add_argument("--chunk-steps", type=int, default=4)
+    args = ap.parse_args(argv)
+
     arch = configs.get_reduced("kanformer-100m")
     params = lm.init_params(jax.random.PRNGKey(0), arch.model)
     eng = Engine(params, arch.model, ServeConfig(max_seq=96, max_new_tokens=16))
@@ -24,16 +36,23 @@ def main():
         rs.randint(0, arch.model.vocab, rs.randint(4, 24)).astype(np.int32)
         for _ in range(12)
     ]
-    print(f"backend={jax.default_backend()} "
+    print(f"backend={jax.default_backend()} engine={args.engine} "
           f"kan_method_prefill={resolve_inference_method(rows=4 * 24)} "
           f"kan_method_decode={resolve_inference_method(rows=4)} "
-          f"decode=scan (one compiled program per generation)")
+          f"decode=scan (one compiled program per generation/chunk)")
     t0 = time.time()
-    outs = eng.serve_requests(requests, batch_size=4)
+    if args.engine == "continuous":
+        outs = eng.serve_continuous(requests, slots=4,
+                                    chunk_steps=args.chunk_steps)
+    else:
+        outs = eng.serve_requests(requests, batch_size=4)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     print(f"served {len(requests)} requests / {n_tok} new tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s, {jax.default_backend()})")
+    if args.engine == "continuous" and eng.last_serve_stats:
+        print(f"mean_slot_utilization="
+              f"{eng.last_serve_stats['mean_slot_utilization']:.3f}")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i} prompt_len={len(requests[i])} -> {o[:8].tolist()}...")
 

@@ -1,7 +1,14 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Batched request serving (prefill + decode with KV caches) on the host mesh;
-the production-mesh serve_step is exercised by the dry-run decode cells."""
+the production-mesh serve_step is exercised by the dry-run decode cells.
+
+``--engine static`` drains length-sorted fixed buckets
+(``Engine.serve_requests``); ``--engine continuous`` runs the slot-recycling
+continuous-batching loop (``Engine.serve_continuous``) and reports its slot
+utilization.  Reduced (CPU-runnable) shapes are the default; ``--full``
+selects the full production config.
+"""
 
 from __future__ import annotations
 
@@ -17,19 +24,37 @@ from repro.models import lm
 from repro.serve.engine import Engine, ServeConfig
 
 
-def main(argv=None) -> int:
+def pick_config(arch: str, full: bool):
+    """Reduced shapes by default; ``--full`` opts into the production
+    config.  (The previous ``--reduced`` flag was ``store_true`` with
+    ``default=True`` — impossible to turn off.)"""
+    return configs.get_config(arch) if full else configs.get_reduced(arch)
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.list_configs())
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full production config (default: reduced)")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static: bucket size; continuous: slot count")
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="continuous: decode steps per jitted chunk")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
 
-    arch = configs.get_reduced(args.arch) if args.reduced else configs.get_config(args.arch)
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    arch = pick_config(args.arch, args.full)
     model = arch.model
     if model.input_kind != "tokens":
         print(f"[serve] {args.arch} is {model.input_kind}-input; serving the "
@@ -38,7 +63,8 @@ def main(argv=None) -> int:
     eng = Engine(
         params, model,
         ServeConfig(max_seq=args.prompt_len + args.max_new + 8,
-                    max_new_tokens=args.max_new, temperature=args.temperature),
+                    max_new_tokens=args.max_new, temperature=args.temperature,
+                    eos_id=args.eos_id),
     )
     rs = np.random.RandomState(args.seed)
     reqs = [
@@ -46,11 +72,22 @@ def main(argv=None) -> int:
         for _ in range(args.requests)
     ]
     t0 = time.time()
-    outs = eng.serve_requests(reqs, batch_size=args.batch, seed=args.seed)
+    if args.engine == "continuous":
+        outs = eng.serve_continuous(
+            reqs, slots=args.batch, chunk_steps=args.chunk_steps,
+            seed=args.seed,
+        )
+    else:
+        outs = eng.serve_requests(reqs, batch_size=args.batch, seed=args.seed)
     dt = time.time() - t0
     total_new = sum(len(o) for o in outs)
-    print(f"[serve] {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s) on {jax.default_backend()}")
+    print(f"[serve:{args.engine}] {len(reqs)} requests, {total_new} tokens "
+          f"in {dt:.2f}s ({total_new/dt:.1f} tok/s) on {jax.default_backend()}")
+    if args.engine == "continuous" and eng.last_serve_stats:
+        s = eng.last_serve_stats
+        print(f"[serve:continuous] slot_utilization="
+              f"{s['mean_slot_utilization']:.3f} chunks={s['chunks_run']} "
+              f"served={s['n_served']}/{s['n_submitted']}")
     print("sample output ids:", outs[0][:10].tolist())
     return 0
 

@@ -325,6 +325,96 @@ def abstract_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat
     return jax.eval_shape(lambda: init_caches(cfg, batch, max_seq, dtype))
 
 
+def insert_cache_slot(cfg: ModelConfig, caches: dict, one: dict, slot) -> dict:
+    """Write a batch-1 cache tree into batch row ``slot`` of a live cache.
+
+    ``one`` must mirror ``caches`` structurally with batch size 1 (both
+    built for the same ``max_seq``, e.g. by :func:`prefill` vs
+    :func:`init_caches`).  The batch axis of each leaf is located by name
+    via :func:`cache_axes` — stacked unit caches carry a leading 'layers'
+    axis, so the batch axis is not a fixed position.  ``slot`` may be a
+    traced scalar: the write lowers to one dynamic_update_slice per leaf,
+    so a single jitted program serves every slot.
+    """
+    axes = cache_axes(cfg)
+
+    def put(big, small, ax):
+        b_axis = ax.names.index("batch")
+        return jax.lax.dynamic_update_slice_in_dim(
+            big, small.astype(big.dtype), slot, axis=b_axis
+        )
+
+    return jax.tree.map(put, caches, one, axes)
+
+
+def prefill_into_slot(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,           # (1, T_pad) int32, right-padded prompt
+    length: jax.Array,           # scalar int32: true prompt length (>= 1)
+    slot,                        # scalar int32: target batch row
+    caches: dict,
+    max_seq: int,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    """Prefill ONE request and splice its KV into slot ``slot`` of a live
+    batch cache — the cache-insert primitive continuous batching needs to
+    swap a finished row for a queued request between decode chunks.
+
+    Returns ``(last_logits (vocab,) fp32, caches)`` where ``last_logits``
+    is taken at the request's own last real token (position ``length-1``;
+    causal attention makes it independent of the right-padding, which is
+    what keeps slot-admitted generations bit-identical to solo
+    :class:`~repro.serve.engine.Engine` ``generate`` calls).  Jit callers
+    retrace once per padded prompt length ``T_pad`` (bucket prompts to
+    bound compiles); ``length`` and ``slot`` stay traced.  Thin k=1 wrapper
+    over :func:`prefill_into_slots` — the serve loop uses the grouped form
+    because slots free in bursts at chunk boundaries.
+    """
+    last, caches = prefill_into_slots(
+        params, cfg, tokens,
+        jnp.reshape(jnp.asarray(length, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(slot, jnp.int32), (1,)),
+        caches, max_seq, compute_dtype,
+    )
+    return last[0], caches
+
+
+def prefill_into_slots(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,           # (k, T_pad) int32, right-padded prompts
+    lengths: jax.Array,          # (k,) int32 true prompt lengths
+    slots: jax.Array,            # (k,) int32 target batch rows
+    caches: dict,
+    max_seq: int,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    """Batched :func:`prefill_into_slot`: ONE prefill dispatch admits ``k``
+    queued requests at once (k is static — jit callers retrace per
+    ``(k, T_pad)`` admission-group shape).  Continuous batching frees slots
+    in bursts at chunk boundaries, so grouped admission amortizes the
+    prefill dispatch overhead that dominates one-at-a-time slot refills.
+    Row independence of prefill makes each admitted row bit-identical to
+    its batch-1 admission.  Returns ``(last_logits (k, vocab), caches)``.
+    """
+    k = tokens.shape[0]
+    logits, many = prefill(params, cfg, {"tokens": tokens}, max_seq, compute_dtype)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1
+    )[:, 0]
+    axes = cache_axes(cfg)
+    for i in range(k):
+        one = jax.tree.map(
+            lambda a, ax: jax.lax.dynamic_slice_in_dim(
+                a, i, 1, axis=ax.names.index("batch")
+            ),
+            many, axes,
+        )
+        caches = insert_cache_slot(cfg, caches, one, slots[i])
+    return last, caches
+
+
 def decode_step(
     params: dict,
     cfg: ModelConfig,

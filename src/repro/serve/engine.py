@@ -4,45 +4,60 @@ The engine jits one ``prefill`` per (batch, seq) bucket and ONE
 scan-over-steps decode program per batch shape: the whole generation after
 prefill is a single compiled ``jax.lax.scan`` (``max_new_tokens`` static),
 so a request costs two XLA dispatches instead of ``max_new_tokens`` Python
-round-trips.  Continuous batching is modelled with per-slot positions:
-finished sequences keep decoding into a dead slot until the batch drains
-(the standard static-batch serving compromise; true continuous batching
-needs host-side slot swapping, which ``serve_requests`` implements at
-bucket granularity).
+round-trips.
 
-``serve_requests`` buckets requests by prompt length before batching, so a
-mixed-length request list pads each bucket to its own max instead of the
-global max (DESIGN.md §3).
+Two serving drivers share that program:
+
+* ``serve_requests`` — static bucketing: requests are length-sorted into
+  fixed batches and each bucket drains to ``max_new_tokens`` (finished rows
+  keep decoding into dead slots — the idle-PE problem in software);
+* ``serve_continuous`` — true continuous batching: a slot table
+  (``serve/scheduler.py``) runs fixed-shape jitted decode *chunks*
+  (``chunk_steps``-long scans with per-row EOS latching) and swaps finished
+  slots for queued requests between chunks via
+  ``lm.prefill_into_slots`` — queued requests' KV is prefilled and spliced into
+  a live batch cache row.
 
 Padding is **right**-padding with per-request start offsets: real tokens
 sit at positions ``0..len-1``, causal attention means no real token ever
 attends a pad, each request samples from the logits at its *own* last real
 position, and decode starts ragged at ``pos_b = len_b`` (overwriting pad
-cache slots before they become attendable).  Under greedy decoding
-(``temperature == 0``, the default) a request's generation is therefore
-invariant to its batch-mates and to the amount of padding
-(regression-tested); with ``temperature > 0`` the *logits* are still
-pad-invariant, but the sampling noise is drawn from one PRNG key over the
-whole batch, so sampled tokens depend on bucket composition.  The previous
-revision left-padded and attended the pads unmasked — even the logits
-changed with bucket composition.  Caveat: ragged
-decode into *windowed* (ring-buffer) attention layers can still attend
-stale pad slots once a row's position wraps the window; the KAN serving
-configs use full attention, where the invariance is exact.  SSM/LSTM block
-states are sequential and not pad-invariant under any padding scheme;
-equal-length buckets (the common case after length bucketing) avoid
-padding entirely.
+cache slots before they become attendable).
+
+Sampling is **per-row**: each row's PRNG key chain is derived from its
+*request id* (``fold_in(PRNGKey(seed), request_id)``, then one split per
+emitted token), never from its batch position — so even ``temperature >
+0`` generation is bit-invariant to batch-mates, padding, and scheduling
+(static vs continuous).  An earlier revision drew all rows' noise from one
+batch-wide key, making sampled outputs depend on bucket composition.
+
+EOS (``ServeConfig.eos_id >= 0``) latches per row: the EOS token itself is
+emitted, every later step of that row emits ``pad_id`` and the row's
+position freezes (its cache stops growing).  ``eos_id = -1`` (default)
+never matches a real token id, so the same compiled program reproduces the
+never-stop behavior exactly.  Under both greedy and sampled decoding a
+request's full ``max_new``-token output (EOS, then pads) is bit-identical
+between a solo ``generate`` call and any scheduling of
+``serve_requests``/``serve_continuous`` (regression-tested).
+
+Caveat: ragged decode into *windowed* (ring-buffer) attention layers can
+still attend stale pad slots once a row's position wraps the window; the
+KAN serving configs use full attention, where the invariance is exact.
+SSM/LSTM block states are sequential and not pad-invariant under any
+padding scheme; equal-length buckets avoid padding entirely.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serve.scheduler import ContinuousScheduler
 
 
 @dataclasses.dataclass
@@ -51,6 +66,7 @@ class ServeConfig:
     max_new_tokens: int = 64
     temperature: float = 0.0
     eos_id: int = -1             # -1: never stops early
+    pad_id: int = 0              # emitted after a row latches on EOS
     compute_dtype: str = "float32"
     decode_impl: str = "scan"    # "scan" (one compiled program) | "loop"
 
@@ -61,6 +77,7 @@ class Engine:
         self.model = model_cfg
         self.cfg = serve_cfg
         self._dt = jnp.float32 if serve_cfg.compute_dtype == "float32" else jnp.bfloat16
+        self.last_serve_stats: dict | None = None
 
         self._prefill = jax.jit(
             lambda p, inputs: lm.prefill(
@@ -73,43 +90,103 @@ class Engine:
             ),
             donate_argnums=(2,),   # caches update in place
         )
-        # scan decode: the whole generation is one compiled program
+        # scan decode: the whole generation (or one continuous-batching
+        # chunk) is one compiled program; retraces per static step count
         self._decode_scan = jax.jit(
             self._scan_impl, static_argnums=(0,), donate_argnums=(3,)
         )
+        # continuous batching: prefill an admission *group* of k queued
+        # requests in ONE dispatch and splice them into their slots
+        # (retraces once per (k, padded prompt length) group shape — slots
+        # free in bursts at chunk boundaries, so k-batching amortizes the
+        # prefill dispatch overhead that dominates one-at-a-time refills)
+        self._prefill_insert = jax.jit(
+            lambda p, toks, lengths, slots, caches: lm.prefill_into_slots(
+                p, self.model, toks, lengths, slots, caches,
+                self.cfg.max_seq, self._dt,
+            ),
+            donate_argnums=(4,),
+        )
+        # per-row key derivation + first-token sampling, shared by generate
+        # and slot admission (jitted: the eager vmap path costs ms per call)
+        self._keys_first = jax.jit(self._keys_first_impl)
 
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
+    # ------------------------------------------------------------------
+    # per-row PRNG: key chain = fold_in(base, request_id), split per token
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _row_key_pairs(base_key, request_ids: jax.Array) -> jax.Array:
+        """(B,) request ids -> (B, 2, 2): [:, 0] the carried chain key,
+        [:, 1] the first sampling key.  vmap of split == per-row split, so
+        a solo call and any batched call agree bit-for-bit."""
+        return jax.vmap(
+            lambda r: jax.random.split(jax.random.fold_in(base_key, r))
+        )(request_ids.astype(jnp.int32))
+
+    def _keys_first_impl(self, base_key, request_ids, last_logits):
+        """-> (carry keys (B, 2), first sampled token (B,)): each row's key
+        chain and its first token, from the logits at its last real prompt
+        position.  One definition serves solo ``generate`` and continuous
+        slot admission, so the two are bit-identical by construction."""
+        pairs = self._row_key_pairs(base_key, request_ids)
+        return pairs[:, 0], self._sample(last_logits, pairs[:, 1])
+
+    def _sample(self, logits: jax.Array, step_keys: jax.Array) -> jax.Array:
+        """logits (B, vocab), step_keys (B, 2) — one key per row."""
         if self.cfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.cfg.temperature).astype(
-            jnp.int32
-        )
+        t = self.cfg.temperature
+        return jax.vmap(
+            lambda k, lg: jax.random.categorical(k, lg / t)
+        )(step_keys, logits).astype(jnp.int32)
 
-    def _scan_impl(self, steps, params, tok0, caches, pos0, key0):
+    def _scan_impl(self, steps, params, tok0, caches, pos0, keys0, eos_hit0,
+                   eos_id, pad_id):
         """(steps static) scan body == one loop iteration of the unrolled
-        decode, so scan and loop are bit-identical (tested)."""
+        decode, so scan and loop are bit-identical (tested).
+
+        Per-row EOS latching: once row b emits ``eos_id`` every later step
+        emits ``pad_id`` and (when ``pos`` is per-row) its position
+        freezes.  ``eos_id``/``pad_id`` are traced scalars — one compiled
+        program serves every eos choice, and ``eos_id = -1`` never matches
+        a sampled token (ids are >= 0), reproducing never-stop exactly.
+        Returns ``(toks (steps, B), tok_last, caches, pos, keys, eos_hit)``
+        — the full carry, so continuous batching can resume the next chunk
+        where this one left off.
+        """
 
         def body(carry, _):
-            tok, caches, pos, key = carry
+            tok, caches, pos, keys, eos_hit = carry
             lg, caches = lm.decode_step(
                 params, self.model, tok, caches, pos, self._dt
             )
-            key, kt = jax.random.split(key)
-            nxt = self._sample(lg, kt)[:, None]
-            return (nxt, caches, pos + 1, key), nxt[:, 0]
+            pairs = jax.vmap(jax.random.split)(keys)
+            keys, kt = pairs[:, 0], pairs[:, 1]
+            nxt = self._sample(lg, kt)
+            emitted = jnp.where(eos_hit, pad_id, nxt)
+            eos_new = eos_hit | (nxt == eos_id)
+            if pos.ndim == 0:      # synchronized scalar-position decode
+                pos = pos + 1
+            else:                  # ragged/continuous: latched rows freeze
+                pos = jnp.where(eos_hit, pos, pos + 1)
+            return (emitted[:, None], caches, pos, keys, eos_new), emitted
 
-        (_, caches, _, _), toks = jax.lax.scan(
-            body, (tok0, caches, pos0, key0), None, length=steps
+        (tok, caches, pos, keys, eos_hit), toks = jax.lax.scan(
+            body, (tok0, caches, pos0, keys0, eos_hit0), None, length=steps
         )
-        return toks, caches   # toks: (steps, B)
+        return toks, tok, caches, pos, keys, eos_hit   # toks: (steps, B)
 
     def generate(
         self,
         prompts: np.ndarray,
         seed: int = 0,
         lengths: np.ndarray | None = None,
+        request_ids: np.ndarray | None = None,
+        max_new: int | None = None,
+        eos_id: int | None = None,
     ) -> np.ndarray:
-        """prompts: (B, T_prompt) int32 -> (B, max_new_tokens) int32.
+        """prompts: (B, T_prompt) int32 -> (B, max_new) int32.
 
         ``lengths`` (optional, (B,)): true prompt lengths for right-padded
         prompts.  Each row then samples from the logits at its own last real
@@ -117,16 +194,35 @@ class Engine:
         invariant to batch-mates and padding (module docstring).  Without
         ``lengths`` every row is taken as full-length (synchronized decode,
         collective-free scalar-position cache writes).
+
+        ``request_ids`` (optional, (B,)): per-row sampling identity; rows
+        with the same id draw the same noise in any batch (defaults to
+        ``arange(B)``).  ``max_new``/``eos_id`` override the config values
+        per call (``max_new`` retraces the scan; ``eos_id`` does not).
+        Rows that emit ``eos_id`` latch: the output carries the EOS token
+        followed by ``pad_id`` up to the fixed ``max_new`` length.
         """
         B, T = prompts.shape
-        assert T + self.cfg.max_new_tokens <= self.cfg.max_seq
+        max_new = self.cfg.max_new_tokens if max_new is None else int(max_new)
+        eos = self.cfg.eos_id if eos_id is None else int(eos_id)
+        assert max_new >= 1 and T + max_new <= self.cfg.max_seq
         logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
-        key = jax.random.PRNGKey(seed)
-        key, k0 = jax.random.split(key)
+        rids = (
+            np.arange(B, dtype=np.int32)
+            if request_ids is None
+            else np.asarray(request_ids, np.int32)
+        )
+        assert rids.shape == (B,)
         if lengths is None:
             last = logits[:, T - 1]
             # synchronized decode (scalar position): collective-free writes
-            pos = jnp.asarray(T, jnp.int32)
+            # — unless EOS can latch rows at different steps, which needs
+            # per-row frozen positions
+            pos = (
+                jnp.asarray(T, jnp.int32)
+                if eos < 0
+                else jnp.full((B,), T, jnp.int32)
+            )
         else:
             lengths = np.asarray(lengths, np.int32)
             assert lengths.shape == (B,), (lengths.shape, B)
@@ -138,19 +234,34 @@ class Engine:
             # lands at slot len_b, overwriting the pad K/V before any mask
             # ever exposes it
             pos = jnp.asarray(lengths, jnp.int32)
-        tok = self._sample(last, k0)[:, None]
-        steps = self.cfg.max_new_tokens - 1
+        keys, tok0 = self._keys_first(
+            jax.random.PRNGKey(seed), jnp.asarray(rids), last
+        )
+        tok = tok0[:, None]
+        eos_hit = tok[:, 0] == eos          # eos = -1 never matches
+        eos_a, pad_a = jnp.int32(eos), jnp.int32(self.cfg.pad_id)
+        steps = max_new - 1
         if self.cfg.decode_impl == "scan":
-            toks, _ = self._decode_scan(steps, self.params, tok, caches, pos, key)
+            toks, _, _, _, _, _ = self._decode_scan(
+                steps, self.params, tok, caches, pos, keys, eos_hit,
+                eos_a, pad_a,
+            )
             out = jnp.concatenate([tok, toks.T], axis=1)
-        else:  # python-loop reference (one dispatch per step)
+        else:  # python-loop reference (one dispatch per step), mirrors body
             outs = [tok]
             for _ in range(steps):
                 lg, caches = self._decode(self.params, tok, caches, pos)
-                key, kt = jax.random.split(key)
-                tok = self._sample(lg, kt)[:, None]
+                pairs = jax.vmap(jax.random.split)(keys)
+                keys, kt = pairs[:, 0], pairs[:, 1]
+                nxt = self._sample(lg, kt)
+                emitted = jnp.where(eos_hit, pad_a, nxt)
+                if pos.ndim == 0:
+                    pos = pos + 1
+                else:
+                    pos = jnp.where(eos_hit, pos, pos + 1)
+                eos_hit = eos_hit | (nxt == eos_a)
+                tok = emitted[:, None]
                 outs.append(tok)
-                pos = pos + 1
             out = jnp.concatenate(outs, axis=1)
         return np.asarray(out)
 
@@ -158,30 +269,227 @@ class Engine:
         self, requests: list[np.ndarray], batch_size: int = 8, seed: int = 0
     ) -> list[np.ndarray]:
         """Bucket requests BY LENGTH into fixed batches (pad with copies) and
-        drain bucket by bucket — the batched-serving driver used by
-        examples/serve_kan.py.  Length-sorting means each bucket pads to its
-        own max prompt length, not the global max.  Mixed-length buckets
-        RIGHT-pad and thread the true lengths through ``generate``, so a
-        request's output never depends on its batch-mates or the padding;
-        equal-length buckets (the common case after sorting) skip the
-        length plumbing and keep the synchronized scalar-position decode."""
+        drain bucket by bucket — the *static* batched-serving driver.
+        Length-sorting means each bucket pads to its own max prompt length,
+        not the global max.  Mixed-length buckets RIGHT-pad and thread the
+        true lengths through ``generate``; per-row sampling keys are derived
+        from each request's index in ``requests``, so outputs (greedy OR
+        sampled) never depend on batch-mates or padding.  Finished (EOS)
+        rows latch but their slots are NOT recycled — see
+        :meth:`serve_continuous` for that."""
         order = sorted(range(len(requests)), key=lambda i: requests[i].shape[0])
         results: list[np.ndarray | None] = [None] * len(requests)
-        for bi, start in enumerate(range(0, len(order), batch_size)):
+        t0 = time.perf_counter()
+        buckets: list[dict] = []
+        for start in range(0, len(order), batch_size):
             idxs = order[start : start + batch_size]
             bucket = [requests[i] for i in idxs]
             T = max(r.shape[0] for r in bucket)
             lens = np.asarray([r.shape[0] for r in bucket], np.int32)
+            rids = np.asarray(idxs, np.int32)
             padded = np.stack(
                 [np.pad(r, (0, T - r.shape[0]), constant_values=0) for r in bucket]
             )
             while padded.shape[0] < batch_size:
                 padded = np.concatenate([padded, padded[-1:]], axis=0)
                 lens = np.concatenate([lens, lens[-1:]], axis=0)
+                rids = np.concatenate([rids, rids[-1:]], axis=0)
             gen = self.generate(
-                padded.astype(np.int32), seed=seed + bi,
+                padded.astype(np.int32), seed=seed,
                 lengths=None if bool((lens == T).all()) else lens,
+                request_ids=rids,
             )
             for j, i in enumerate(idxs):
                 results[i] = gen[j]
+            # a request "completes" when its bucket drains — the latency
+            # accounting the serving benchmark compares against continuous
+            buckets.append({
+                "request_ids": idxs,
+                "rows": int(padded.shape[0]),
+                "done_s": time.perf_counter() - t0,
+            })
+        self.last_serve_stats = {
+            "wall_s": time.perf_counter() - t0,
+            "buckets": buckets,
+            "request_latency_s": [
+                next(b["done_s"] for b in buckets if i in b["request_ids"])
+                for i in range(len(requests))
+            ],
+        }
         return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+
+    def serve_continuous(
+        self,
+        requests: list[np.ndarray],
+        slots: int = 8,
+        chunk_steps: int = 8,
+        seed: int = 0,
+        max_new: int | list[int] | None = None,
+        prompt_pad_multiple: int = 8,
+    ) -> list[np.ndarray]:
+        """True continuous batching: a ``slots``-row decode batch whose rows
+        are recycled the moment a request finishes (EOS latch or token
+        budget), instead of draining with the bucket.
+
+        The loop alternates two fixed-shape jitted programs: a decode
+        *chunk* (``chunk_steps`` scan steps over all slots, per-row EOS
+        latching/frozen positions for dead rows) and ``lm.prefill_into_slots``
+        (one queued request prefilled at a bucketed prompt length and its
+        KV spliced into the freed row).  Between chunks the host scheduler
+        (``serve/scheduler.py``) retires finished slots and admits from the
+        FIFO queue.  Recompile boundaries: one trace per ``chunk_steps``
+        value and one per padded prompt length (``prompt_pad_multiple``
+        buckets them).
+
+        ``max_new``: per-request (list) or global token budgets; default
+        ``cfg.max_new_tokens``.  Each request's output has exactly its
+        budget's length, padded with ``pad_id`` after EOS — bit-identical
+        to a solo :meth:`generate` call with the same ``request_id`` (its
+        index in ``requests``), for greedy AND sampled decoding.
+
+        Sets ``self.last_serve_stats`` (scheduler counters, per-request
+        latency, wall time) for the serving benchmark.
+        """
+        n = len(requests)
+        if max_new is None:
+            budgets = [self.cfg.max_new_tokens] * n
+        elif isinstance(max_new, int):
+            budgets = [max_new] * n
+        else:
+            budgets = [int(m) for m in max_new]
+            assert len(budgets) == n
+        eos, pad = self.cfg.eos_id, self.cfg.pad_id
+        for r, m in zip(requests, budgets):
+            assert m >= 1 and r.shape[0] + m <= self.cfg.max_seq, (
+                f"prompt {r.shape[0]} + max_new {m} > max_seq {self.cfg.max_seq}"
+            )
+        assert chunk_steps >= 1 and slots >= 1
+
+        sched = ContinuousScheduler(slots, range(n))
+        caches = lm.init_caches(self.model, slots, self.cfg.max_seq, self._dt)
+        # host mirrors of the per-slot device state fed to each chunk
+        tok = np.zeros((slots, 1), np.int32)
+        pos = np.zeros((slots,), np.int32)
+        keys = np.zeros((slots, 2), np.uint32)
+        eos_hit = np.ones((slots,), bool)      # empty slots stay latched
+        base = jax.random.PRNGKey(seed)
+        bufs: list[list[int]] = [[] for _ in range(n)]
+        outputs: list[np.ndarray | None] = [None] * n
+        t0 = time.perf_counter()
+        latency = [0.0] * n
+
+        def finalize(rid: int) -> None:
+            got = bufs[rid][: budgets[rid]]
+            out = np.full((budgets[rid],), pad, np.int32)
+            out[: len(got)] = got
+            outputs[rid] = out
+            latency[rid] = time.perf_counter() - t0
+
+        def admit_all():
+            nonlocal caches
+            while True:
+                ready = sched.admit_ready()
+                if not ready:
+                    return
+                # one prefill dispatch per (padded length) admission group
+                groups: dict[int, list[tuple[int, int]]] = {}
+                for b, rid in ready:
+                    L = requests[rid].shape[0]
+                    # clamp: padding past L is causally invisible, but the
+                    # prefilled cache must still fit the (slots, max_seq)
+                    # live cache it is spliced into
+                    t_pad = min(
+                        -(-L // prompt_pad_multiple) * prompt_pad_multiple,
+                        self.cfg.max_seq,
+                    )
+                    groups.setdefault(t_pad, []).append((b, rid))
+                for t_pad, grp in sorted(groups.items()):
+                    slots_a = np.asarray([b for b, _ in grp], np.int32)
+                    rids_a = np.asarray([rid for _, rid in grp], np.int32)
+                    lens = np.asarray(
+                        [requests[rid].shape[0] for _, rid in grp], np.int32
+                    )
+                    padded = np.stack([
+                        np.pad(requests[rid], (0, t_pad - requests[rid].shape[0]))
+                        for _, rid in grp
+                    ]).astype(np.int32)
+                    last, caches = self._prefill_insert(
+                        self.params, padded, lens, slots_a, caches
+                    )
+                    kcs_d, firsts_d = self._keys_first(
+                        base, jnp.asarray(rids_a), last
+                    )
+                    kcs, firsts = np.asarray(kcs_d), np.asarray(firsts_d)
+                    for j, (b, rid) in enumerate(grp):
+                        first = int(firsts[j])
+                        bufs[rid].append(first)
+                        hit = eos >= 0 and first == eos
+                        if sched.confirm_admit(b, rid, int(lens[j]),
+                                               budgets[rid] - 1, hit):
+                            finalize(rid)       # done at admission: the
+                            sched.retire(b)     # freed slot is refilled by
+                            eos_hit[b] = True   # the next round of the loop
+                        else:
+                            tok[b, 0] = first
+                            pos[b] = lens[j]
+                            keys[b] = kcs[j]
+                            eos_hit[b] = False
+
+        eos_a, pad_a = jnp.int32(eos), jnp.int32(pad)
+        while True:
+            admit_all()
+            sched.check_invariants()
+            if not sched.can_run_chunk():
+                break
+            toks, tok_l, caches, pos_l, keys_l, eos_l = self._decode_scan(
+                chunk_steps, self.params, jnp.asarray(tok), caches,
+                jnp.asarray(pos), jnp.asarray(keys), jnp.asarray(eos_hit),
+                eos_a, pad_a,
+            )
+            # one device->host transfer; np.array copies because the host
+            # mirrors are written by admission/retirement below
+            toks, tok, pos, keys, eos_hit = [
+                np.array(a)
+                for a in jax.device_get((toks, tok_l, pos_l, keys_l, eos_l))
+            ]
+            if eos >= 0:
+                # first in-chunk EOS emission per slot (chunk_steps if
+                # none): post-EOS pads count as waste in the utilization
+                hits = toks == eos
+                eos_steps = np.where(
+                    hits.any(axis=0), hits.argmax(axis=0), chunk_steps
+                )
+            else:
+                eos_steps = None
+            for b, rid, n_keep, finished in sched.complete_chunk(
+                chunk_steps, eos_hit, eos_steps
+            ):
+                bufs[rid].extend(int(t) for t in toks[:n_keep, b])
+                if finished:
+                    finalize(rid)
+                    sched.retire(b)
+                    eos_hit[b] = True
+
+        sched.check_invariants()
+        assert all(o is not None for o in outputs)
+        self.last_serve_stats = {
+            **sched.stats(),
+            "wall_s": time.perf_counter() - t0,
+            "request_latency_s": latency,
+            "useful_tokens": int(sum(budget_used(bufs[i], budgets[i], eos)
+                                     for i in range(n))),
+        }
+        return outputs  # type: ignore[return-value]
+
+
+def budget_used(buf: list[int], budget: int, eos: int) -> int:
+    """Tokens a request actually *used*: up to and including its EOS, else
+    its full budget (serving-benchmark accounting)."""
+    toks = buf[:budget]
+    if eos >= 0 and eos in toks:
+        return toks.index(eos) + 1
+    return len(toks)

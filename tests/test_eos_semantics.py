@@ -1,0 +1,132 @@
+"""EOS semantics (PR satellite): early-exit latches the row — the EOS
+token is emitted, every later position is ``pad_id``, deterministically —
+``eos_id = -1`` reproduces the never-stop behavior bit-for-bit, scan and
+loop decode impls agree on truncated outputs, and continuous batching
+actually *frees* a latched slot (one slot can serve many EOS-ing requests).
+
+EOS ids are picked from tokens the greedy model really emits, so the latch
+provably fires (no vocabulary guessing).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve.engine import Engine, ServeConfig
+
+MAX_NEW = 6
+PAD = 0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = configs.get_reduced("qwen1.5-0.5b")
+    params = lm.init_params(jax.random.PRNGKey(0), arch.model)
+    cfg = dict(max_seq=48, max_new_tokens=MAX_NEW, pad_id=PAD)
+    scan = Engine(params, arch.model, ServeConfig(**cfg))
+    loop = Engine(params, arch.model, ServeConfig(**cfg, decode_impl="loop"))
+    rs = np.random.RandomState(3)
+    reqs = [rs.randint(0, 100, L).astype(np.int32) for L in (5, 8, 11, 6)]
+    # never-stop references, one per request
+    refs = [scan.generate(r[None].astype(np.int32), seed=0,
+                          request_ids=np.asarray([i]))[0]
+            for i, r in enumerate(reqs)]
+    return scan, loop, reqs, refs
+
+
+def _latched(ref: np.ndarray, eos: int) -> np.ndarray:
+    """Host-side oracle: tokens up to and including the first EOS, then
+    pad_id to the fixed length."""
+    out = np.full_like(ref, PAD)
+    hits = np.nonzero(ref == eos)[0]
+    k = int(hits[0]) if hits.size else len(ref) - 1
+    out[: k + 1] = ref[: k + 1]
+    return out
+
+
+def test_eos_latches_row_and_pads_tail(setup):
+    scan, _, reqs, refs = setup
+    for i, (r, ref) in enumerate(zip(reqs, refs)):
+        for k in (1, 3):
+            eos = int(ref[k])
+            got = scan.generate(r[None].astype(np.int32), seed=0,
+                                request_ids=np.asarray([i]), eos_id=eos)[0]
+            np.testing.assert_array_equal(_latched(ref, eos), got)
+            # post-EOS tail is exactly pad_id — deterministic masking
+            first = int(np.nonzero(ref == eos)[0][0])
+            assert (got[first + 1:] == PAD).all()
+
+
+def test_first_token_eos(setup):
+    scan, _, reqs, refs = setup
+    eos = int(refs[0][0])
+    got = scan.generate(reqs[0][None].astype(np.int32), seed=0,
+                        request_ids=np.asarray([0]), eos_id=eos)[0]
+    expect = np.full(MAX_NEW, PAD, np.int32)
+    expect[0] = eos
+    np.testing.assert_array_equal(expect, got)
+
+
+def test_eos_minus1_preserves_never_stop(setup):
+    scan, _, reqs, refs = setup
+    got = scan.generate(reqs[1][None].astype(np.int32), seed=0,
+                        request_ids=np.asarray([1]), eos_id=-1)[0]
+    np.testing.assert_array_equal(refs[1], got)
+
+
+def test_scan_and_loop_agree_on_truncated_outputs(setup):
+    scan, loop, reqs, refs = setup
+    for i in (0, 2):
+        eos = int(refs[i][2])
+        a = scan.generate(reqs[i][None].astype(np.int32), seed=0,
+                          request_ids=np.asarray([i]), eos_id=eos)
+        b = loop.generate(reqs[i][None].astype(np.int32), seed=0,
+                          request_ids=np.asarray([i]), eos_id=eos)
+        np.testing.assert_array_equal(a, b)
+    # and without EOS
+    a = scan.generate(reqs[3][None].astype(np.int32), seed=0,
+                      request_ids=np.asarray([3]))
+    b = loop.generate(reqs[3][None].astype(np.int32), seed=0,
+                      request_ids=np.asarray([3]))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_eos_in_ragged_batch_matches_solo(setup):
+    """EOS latching is per-row: rows latch at different steps inside one
+    mixed-length batch without perturbing each other."""
+    scan, _, reqs, refs = setup
+    eos = int(refs[2][1])
+    T = max(len(r) for r in reqs)
+    padded = np.stack([np.pad(r, (0, T - len(r))) for r in reqs]).astype(np.int32)
+    lens = np.asarray([len(r) for r in reqs], np.int32)
+    batch = scan.generate(padded, seed=0, lengths=lens,
+                          request_ids=np.arange(len(reqs)), eos_id=eos)
+    for i, r in enumerate(reqs):
+        one = scan.generate(r[None].astype(np.int32), seed=0,
+                            request_ids=np.asarray([i]), eos_id=eos)[0]
+        np.testing.assert_array_equal(one, batch[i])
+
+
+def test_continuous_eos_frees_slots(setup):
+    """EOS early-exit actually recycles the slot: ONE slot serves a queue
+    of requests that all latch early, outputs stay bit-identical to solo,
+    and the scheduler retires everything cleanly."""
+    scan, _, reqs, refs = setup
+    eos = int(refs[2][1])
+    old = scan.cfg.eos_id
+    scan.cfg.eos_id = eos
+    try:
+        outs = scan.serve_continuous(reqs, slots=1, chunk_steps=2, seed=0)
+        for i, r in enumerate(reqs):
+            one = scan.generate(r[None].astype(np.int32), seed=0,
+                                request_ids=np.asarray([i]), eos_id=eos)[0]
+            np.testing.assert_array_equal(one, outs[i])
+        stats = scan.last_serve_stats
+        assert stats["n_served"] == len(reqs)
+        # the latch saved work: request 2 EOSes by its second token, so the
+        # total useful tokens are strictly below the full-budget drain
+        assert stats["useful_tokens"] < len(reqs) * MAX_NEW
+    finally:
+        scan.cfg.eos_id = old

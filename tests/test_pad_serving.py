@@ -8,10 +8,10 @@ overwrites pad cache slots before any mask exposes them.  The previous
 revision left-padded with unmasked pads — outputs changed with bucket
 composition (these tests fail against it).
 
-The invariance guarantee is for greedy decoding (``temperature == 0``, the
-engine default, used throughout here); with sampling the logits are still
-pad-invariant but the noise is drawn from one batch-wide PRNG key, so
-token draws depend on bucket composition (see the engine docstring).
+The invariance now covers sampling too: per-row PRNG key chains are
+derived from each request's *identity* (``request_ids``), never its batch
+position, so ``temperature > 0`` draws are also batch-mate invariant (an
+earlier revision drew all rows' noise from one batch-wide key).
 """
 
 import jax
@@ -24,10 +24,23 @@ from repro.serve.engine import Engine, ServeConfig
 
 
 @pytest.fixture(scope="module")
-def engine():
+def arch_params():
     arch = configs.get_reduced("qwen1.5-0.5b")
     params = lm.init_params(jax.random.PRNGKey(0), arch.model)
+    return arch, params
+
+
+@pytest.fixture(scope="module")
+def engine(arch_params):
+    arch, params = arch_params
     return Engine(params, arch.model, ServeConfig(max_seq=48, max_new_tokens=5))
+
+
+@pytest.fixture(scope="module")
+def sampled_engine(arch_params):
+    arch, params = arch_params
+    return Engine(params, arch.model,
+                  ServeConfig(max_seq=48, max_new_tokens=5, temperature=1.0))
 
 
 RS = np.random.RandomState(7)
@@ -72,6 +85,29 @@ def test_ragged_batch_rows_match_solo(engine):
     for i, r in enumerate(reqs):
         solo = engine.generate(r[None, :].astype(np.int32), seed=0)
         np.testing.assert_array_equal(solo[0], batch[i])
+
+
+def test_sampled_generation_invariant_to_batch_mates(sampled_engine):
+    """temperature > 0: per-request PRNG keys (``request_ids``) make even
+    the sampled draws independent of bucket composition and padding."""
+    eng = sampled_engine
+    solo = eng.generate(REQ_SHORT[None, :].astype(np.int32), seed=0,
+                        request_ids=np.asarray([0]))
+    T = max(len(REQ_SHORT), len(REQ_LONG))
+    padded = np.stack([np.pad(REQ_SHORT, (0, T - len(REQ_SHORT))),
+                       np.pad(REQ_LONG, (0, T - len(REQ_LONG)))]).astype(np.int32)
+    both = eng.generate(padded, seed=0,
+                        lengths=np.asarray([len(REQ_SHORT), len(REQ_LONG)]),
+                        request_ids=np.asarray([0, 1]))
+    np.testing.assert_array_equal(solo[0], both[0])
+    # the serving drivers key rows by request index: same list position,
+    # different batch-mates -> identical sampled output
+    a = eng.serve_requests([REQ_SHORT, REQ_MID], batch_size=2, seed=0)
+    b = eng.serve_requests([REQ_SHORT, REQ_LONG, REQ_MID], batch_size=4, seed=0)
+    np.testing.assert_array_equal(a[0], b[0])
+    c = eng.serve_continuous([REQ_SHORT, REQ_LONG], slots=2, chunk_steps=2,
+                             seed=0)
+    np.testing.assert_array_equal(solo[0], c[0])
 
 
 def test_equal_length_bucket_keeps_sync_decode(engine):

@@ -1,0 +1,54 @@
+"""CLI smoke tests for the serving launcher (PR satellite).
+
+The previous ``--reduced`` flag was ``action="store_true", default=True`` —
+syntactically present but impossible to turn off.  It is now ``--full``
+(default: reduced); both selection paths are covered here, plus subprocess
+smoke runs of the static and continuous engines at reduced shapes.
+"""
+
+import subprocess
+import sys
+
+from repro.launch.serve import build_parser, pick_config
+
+ARCH = "qwen1.5-0.5b"
+
+
+def test_full_flag_defaults_off_and_toggles():
+    args = build_parser().parse_args(["--arch", ARCH])
+    assert args.full is False
+    args = build_parser().parse_args(["--arch", ARCH, "--full"])
+    assert args.full is True
+
+
+def test_pick_config_selects_both_paths():
+    reduced = pick_config(ARCH, full=False)
+    full = pick_config(ARCH, full=True)
+    assert reduced.model.d_model < full.model.d_model
+    assert reduced.model.name == full.model.name
+
+
+def _run_cli(*extra: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", ARCH,
+         "--requests", "3", "--batch", "2", "--prompt-len", "8",
+         "--max-new", "4", *extra],
+        capture_output=True, text=True, timeout=900,
+        # JAX_PLATFORMS=cpu: without it jax may probe a TPU runtime (slow
+        # metadata retries on TPU-image hosts)
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"}, cwd=".",
+    )
+
+
+def test_cli_static_engine_smoke():
+    proc = _run_cli("--engine", "static")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "[serve:static]" in proc.stdout, proc.stdout
+
+
+def test_cli_continuous_engine_smoke():
+    proc = _run_cli("--engine", "continuous", "--chunk-steps", "2")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "[serve:continuous]" in proc.stdout, proc.stdout
+    assert "slot_utilization=" in proc.stdout, proc.stdout
