@@ -4,11 +4,13 @@ Prints ``name,us_per_call,derived`` CSV (brief deliverable (d)) and writes
 ``BENCH_kan_paths.json`` (µs per KAN path + modeled HBM bytes + autotuned
 tile choices) so future PRs have a perf trajectory to compare against.
 
-``--smoke`` runs the kanpaths and serving suites at reduced shapes (sets
-``$KAN_SAS_BENCH_SMOKE=1``) and *fails* unless the written JSONs carry the
-sparse-path rows (``BENCH_kan_paths.json``) and the continuous-engine rows
-(``BENCH_serve.json``) — the CI gates that keep the N:M sparse datapath and
-the continuous-batching engine in the perf trajectory."""
+``--smoke`` runs the kanpaths, serving, and prefix-cache suites at reduced
+shapes (sets ``$KAN_SAS_BENCH_SMOKE=1``) and *fails* unless the written
+JSONs carry the sparse-path rows (``BENCH_kan_paths.json``), the
+continuous-engine rows (``BENCH_serve.json``), and the paged-engine rows
+(``BENCH_prefix.json``) — the CI gates that keep the N:M sparse datapath,
+the continuous-batching engine, and the paged KV subsystem in the perf
+trajectory."""
 
 from __future__ import annotations
 
@@ -20,6 +22,8 @@ import traceback
 KAN_PATHS_JSON = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_kan_paths.json")
 SERVE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+PREFIX_JSON = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_prefix.json")
 
 
 def _check_sparse_rows(rep: dict) -> list[str]:
@@ -57,6 +61,30 @@ def _check_serve_rows(rep: dict) -> list[str]:
     return problems
 
 
+def _check_prefix_rows(rep: dict) -> list[str]:
+    """The paged-engine rows every prefix report must carry (CI smoke
+    gate): without them the trajectory silently loses the paged-vs-dense
+    comparison and the prefill-tokens-saved acceptance metric."""
+    problems = []
+    engines = rep.get("engines", {})
+    if "dense_prefix" not in engines:
+        problems.append("engines.dense_prefix missing")
+    paged = engines.get("paged_prefix")
+    if paged is None:
+        problems.append("engines.paged_prefix missing")
+    else:
+        for key in ("tokens_per_s", "prefill_tokens_saved",
+                    "prefill_tokens_saved_ratio", "prefix_hit_rate",
+                    "blocks_in_use_watermark"):
+            if key not in paged:
+                problems.append(f"engines.paged_prefix.{key} missing")
+    if "prefill_tokens_saved_ratio" not in rep:
+        problems.append("prefill_tokens_saved_ratio missing")
+    if "pr3_workload" not in rep:
+        problems.append("pr3_workload missing")
+    return problems
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -67,6 +95,7 @@ def main() -> None:
         arkane_compare,
         kan_paths,
         pe_energy,
+        prefix_bench,
         quant_accuracy,
         roofline,
         sa_sweep,
@@ -83,10 +112,12 @@ def main() -> None:
         ("quant", quant_accuracy),
         ("kanpaths", kan_paths),
         ("serve", serve_bench),
+        ("prefix", prefix_bench),
         ("roofline", roofline),
     ]
     if smoke:
-        suites = [("kanpaths", kan_paths), ("serve", serve_bench)]
+        suites = [("kanpaths", kan_paths), ("serve", serve_bench),
+                  ("prefix", prefix_bench)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in suites:
@@ -99,6 +130,7 @@ def main() -> None:
     gates = [
         (kan_paths, KAN_PATHS_JSON, _check_sparse_rows, "SPARSE"),
         (serve_bench, SERVE_JSON, _check_serve_rows, "SERVE"),
+        (prefix_bench, PREFIX_JSON, _check_prefix_rows, "PREFIX"),
     ]
     for mod, json_path, checker, label in gates:
         rep = getattr(mod.run, "last_report", None)

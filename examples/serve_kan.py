@@ -3,10 +3,17 @@ through the prefill+decode engine.
 
     PYTHONPATH=src python examples/serve_kan.py                      # static
     PYTHONPATH=src python examples/serve_kan.py --engine continuous  # slots
+    PYTHONPATH=src python examples/serve_kan.py --engine continuous \\
+        --shared-prefix                                   # paged + prefix hits
 
 ``--engine static`` drains length-sorted fixed buckets;
 ``--engine continuous`` recycles batch slots the moment a request finishes
 (EOS or budget) — the software analogue of the paper's never-idle PEs.
+``--shared-prefix`` switches to the paged KV cache and builds a
+system-prompt-heavy workload (every request shares a long prefix, unique
+short suffixes): the prefix cache prefillls the shared blocks once and
+every later admission reuses them, so the demo prints how many prefill
+tokens the block pool saved (DESIGN.md §3b).
 """
 
 import argparse
@@ -26,16 +33,34 @@ def main(argv=None):
     ap.add_argument("--engine", choices=("static", "continuous"),
                     default="static")
     ap.add_argument("--chunk-steps", type=int, default=4)
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="paged-KV demo: one shared system prompt + unique "
+                         "suffixes, exercising prefix-cache hits end to end")
     args = ap.parse_args(argv)
+    if args.shared_prefix and args.engine != "continuous":
+        ap.error("--shared-prefix needs --engine continuous (paged KV)")
 
     arch = configs.get_reduced("kanformer-100m")
     params = lm.init_params(jax.random.PRNGKey(0), arch.model)
-    eng = Engine(params, arch.model, ServeConfig(max_seq=96, max_new_tokens=16))
+    eng = Engine(params, arch.model,
+                 ServeConfig(max_seq=96, max_new_tokens=16,
+                             paged=args.shared_prefix, block_size=8))
     rs = np.random.RandomState(0)
-    requests = [
-        rs.randint(0, arch.model.vocab, rs.randint(4, 24)).astype(np.int32)
-        for _ in range(12)
-    ]
+    if args.shared_prefix:
+        # system-prompt-heavy workload: 32 shared tokens, 3-8 unique ones
+        system = rs.randint(0, arch.model.vocab, 32).astype(np.int32)
+        requests = [
+            np.concatenate([
+                system,
+                rs.randint(0, arch.model.vocab, rs.randint(3, 9)).astype(np.int32),
+            ])
+            for _ in range(12)
+        ]
+    else:
+        requests = [
+            rs.randint(0, arch.model.vocab, rs.randint(4, 24)).astype(np.int32)
+            for _ in range(12)
+        ]
     print(f"backend={jax.default_backend()} engine={args.engine} "
           f"kan_method_prefill={resolve_inference_method(rows=4 * 24)} "
           f"kan_method_decode={resolve_inference_method(rows=4)} "
@@ -53,6 +78,13 @@ def main(argv=None):
     if args.engine == "continuous" and eng.last_serve_stats:
         print(f"mean_slot_utilization="
               f"{eng.last_serve_stats['mean_slot_utilization']:.3f}")
+        if args.shared_prefix:
+            p = eng.last_serve_stats["paged"]
+            total = p["prefill_tokens_computed"] + p["prefill_tokens_saved"]
+            print(f"paged: prefix_hit_blocks={p['prefix_hit_blocks']} "
+                  f"prefill_tokens_saved={p['prefill_tokens_saved']}/{total} "
+                  f"blocks_watermark={p['blocks_in_use_watermark']}"
+                  f"/{p['pool_blocks'] - 1}")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i} prompt_len={len(requests[i])} -> {o[:8].tolist()}...")
 

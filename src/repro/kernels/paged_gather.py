@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: block-table gather for the paged KV cache.
+
+The paged cache stores KV in a *pool* of fixed-size blocks
+``pool : (n_blocks, block_size, ...)`` shared by every sequence; each batch
+row owns a *block table* ``table : (B, n_logical)`` of physical block ids
+(``n_logical·block_size == max_seq``).  The paged attention read path
+(DESIGN.md §3b) first materialises the logical contiguous view
+
+``view[b, l·bs + o, ...] = pool[table[b, l], o, ...]``
+
+and then runs the *unchanged* dense attention math on it — which is what
+makes paged serving bit-identical to the dense contiguous cache: the gather
+is pure data movement, and positions beyond a row's coverage land on
+physical block 0 (the reserved sentinel/trash block) whose finite garbage
+is annihilated by the causal mask (``exp(NEG_INF - m) == 0.0`` exactly).
+
+On TPU the gather is one ``pallas_call`` over a ``(B, n_logical)`` grid:
+the block table rides in scalar-prefetch memory (SMEM) so each grid step's
+input DMA address — ``pool[table[b, l]]`` — is computed *before* the body
+runs (``pltpu.PrefetchScalarGridSpec``), i.e. the kernel is a pure
+table-driven DMA pipeline with no compute.  Off TPU (and under
+``interpret=True`` for tests) the same semantics come from ``jnp.take``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def gather_blocks_reference(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """``jnp.take`` fallback: (n_blocks, bs, ...) x (B, L) -> (B, L·bs, ...).
+
+    ``mode="clip"`` (jnp.take's default under jit) keeps out-of-range ids
+    safe; the engine never emits them (tables are sentinel-filled).
+    """
+    B, L = table.shape
+    bs = pool.shape[1]
+    g = jnp.take(pool, table.reshape(-1), axis=0)      # (B·L, bs, ...)
+    return g.reshape((B, L * bs) + pool.shape[2:])
+
+
+def _gather_kernel(tbl_ref, pool_ref, out_ref):
+    # pool_ref: one (1, bs, ...) physical block, DMA'd per the index map;
+    # out_ref: the matching (1, 1, bs, ...) logical slot of the output.
+    out_ref[0] = pool_ref[...]
+
+
+def gather_blocks_pallas(
+    pool: jax.Array, table: jax.Array, interpret: bool = False
+) -> jax.Array:
+    """Block-table gather as one TPU ``pallas_call`` (see module docstring).
+
+    Bit-identical to :func:`gather_blocks_reference` (tested in
+    ``tests/test_kv_pool.py`` via interpret mode): both produce
+    ``pool[table[b, l]]`` with no arithmetic on the values.
+    """
+    B, L = table.shape
+    bs = pool.shape[1]
+    rest = pool.shape[2:]
+    zeros = (0,) * len(rest)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bs) + rest,
+                lambda b, l, tbl: (tbl[b, l], 0) + zeros,
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bs) + rest,
+            lambda b, l, tbl: (b, l, 0) + zeros,
+        ),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, L, bs) + rest, pool.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pool)
+    return out.reshape((B, L * bs) + rest)
+
+
+def gather_blocks(
+    pool: jax.Array, table: jax.Array, method: str = "auto"
+) -> jax.Array:
+    """Dispatch: the Pallas DMA-pipeline kernel on TPU, ``jnp.take``
+    elsewhere (``method`` pins a path for tests: ``take`` | ``pallas`` |
+    ``interpret``).  Inside an outer jit the branches trace directly."""
+    if method == "auto":
+        method = "pallas" if jax.default_backend() == "tpu" else "take"
+    if method == "pallas":
+        return gather_blocks_pallas(pool, table, interpret=False)
+    if method == "interpret":
+        return gather_blocks_pallas(pool, table, interpret=True)
+    if method == "take":
+        return gather_blocks_reference(pool, table)
+    raise ValueError(method)

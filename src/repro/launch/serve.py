@@ -6,8 +6,10 @@ the production-mesh serve_step is exercised by the dry-run decode cells.
 ``--engine static`` drains length-sorted fixed buckets
 (``Engine.serve_requests``); ``--engine continuous`` runs the slot-recycling
 continuous-batching loop (``Engine.serve_continuous``) and reports its slot
-utilization.  Reduced (CPU-runnable) shapes are the default; ``--full``
-selects the full production config.
+utilization.  ``--paged`` (continuous only) switches the KV cache to the
+paged block pool with prefix caching and preemption (DESIGN.md §3b);
+``--block-size``/``--pool-blocks`` shape the pool.  Reduced (CPU-runnable)
+shapes are the default; ``--full`` selects the full production config.
 """
 
 from __future__ import annotations
@@ -43,6 +45,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="static: bucket size; continuous: slot count")
     ap.add_argument("--chunk-steps", type=int, default=8,
                     help="continuous: decode steps per jitted chunk")
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous: paged KV cache (block pool + prefix "
+                         "caching + preemption; DESIGN.md §3b)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged: tokens per KV block (must divide max_seq)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged: physical blocks incl. the sentinel "
+                         "(default: dense-equivalent capacity)")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -59,12 +69,19 @@ def main(argv=None) -> int:
     if model.input_kind != "tokens":
         print(f"[serve] {args.arch} is {model.input_kind}-input; serving the "
               f"token path is exercised via mixed/embeddings archs in tests")
+    if args.paged and args.engine != "continuous":
+        print("[serve] --paged requires --engine continuous", file=sys.stderr)
+        return 2
     params = lm.init_params(jax.random.PRNGKey(args.seed), model)
+    max_seq = args.prompt_len + args.max_new + 8
+    if args.paged:   # the paged pool addresses whole blocks
+        max_seq = -(-max_seq // args.block_size) * args.block_size
     eng = Engine(
         params, model,
-        ServeConfig(max_seq=args.prompt_len + args.max_new + 8,
+        ServeConfig(max_seq=max_seq,
                     max_new_tokens=args.max_new, temperature=args.temperature,
-                    eos_id=args.eos_id),
+                    eos_id=args.eos_id, paged=args.paged,
+                    block_size=args.block_size, pool_blocks=args.pool_blocks),
     )
     rs = np.random.RandomState(args.seed)
     reqs = [
@@ -88,6 +105,14 @@ def main(argv=None) -> int:
         print(f"[serve:continuous] slot_utilization="
               f"{s['mean_slot_utilization']:.3f} chunks={s['chunks_run']} "
               f"served={s['n_served']}/{s['n_submitted']}")
+        if args.paged:
+            p = s["paged"]
+            print(f"[serve:paged] block_size={p['block_size']} "
+                  f"blocks_watermark={p['blocks_in_use_watermark']}"
+                  f"/{p['pool_blocks'] - 1} "
+                  f"prefix_hit_blocks={p.get('prefix_hit_blocks', 0)} "
+                  f"prefill_tokens_saved={p['prefill_tokens_saved']} "
+                  f"preemptions={s['n_preemptions']}")
     print("sample output ids:", outs[0][:10].tolist())
     return 0
 

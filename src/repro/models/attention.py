@@ -161,6 +161,30 @@ def flash_attention(
 # ---------------------------------------------------------------------------
 
 
+def _project_qkv(
+    params: dict, cfg: AttnConfig, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """QKV projection + bias + q/k norm + rotary at absolute ``positions``
+    — the per-position math shared by full prefill (:func:`attn_forward`),
+    paged suffix prefill (:func:`attn_prefill_paged`) and decode steps.
+    One definition is what makes the three paths agree bit-for-bit on every
+    K/V value (the paged bit-identity contract, DESIGN.md §3b)."""
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(q, params["q_norm"])
+        k = _qk_rmsnorm(k, params["k_norm"])
+    cos, sin = L.rotary_embedding(positions, cfg.head_dim, cfg.rope_theta, x.dtype)
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    return q, k, v
+
+
 def attn_forward(
     params: dict,
     cfg: AttnConfig,
@@ -178,19 +202,7 @@ def attn_forward(
         positions = jnp.arange(T)[None, :]
     if cfg.kv_lora_rank is not None:
         return _mla_forward(params, cfg, x, positions, chunk, return_cache)
-    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
-    if cfg.qkv_bias:
-        q = q + params["bq"].astype(x.dtype)
-        k = k + params["bk"].astype(x.dtype)
-        v = v + params["bv"].astype(x.dtype)
-    if cfg.qk_norm:
-        q = _qk_rmsnorm(q, params["q_norm"])
-        k = _qk_rmsnorm(k, params["k_norm"])
-    cos, sin = L.rotary_embedding(positions, cfg.head_dim, cfg.rope_theta, x.dtype)
-    q = L.apply_rotary(q, cos, sin)
-    k = L.apply_rotary(k, cos, sin)
+    q, k, v = _project_qkv(params, cfg, x, positions)
     if cfg.sp_spec is not None:
         from jax.sharding import PartitionSpec as _P
 
@@ -310,24 +322,31 @@ def attn_decode_step(
     B = x.shape[0]
     S = cache["k"].shape[1]
     pos_b = jnp.broadcast_to(pos, (B,))          # per-batch view for masks
-    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
-    if cfg.qkv_bias:
-        q = q + params["bq"].astype(x.dtype)
-        k = k + params["bk"].astype(x.dtype)
-        v = v + params["bv"].astype(x.dtype)
-    if cfg.qk_norm:
-        q = _qk_rmsnorm(q, params["q_norm"])
-        k = _qk_rmsnorm(k, params["k_norm"])
-    cos, sin = L.rotary_embedding(pos_b[:, None], cfg.head_dim, cfg.rope_theta, x.dtype)
-    q = L.apply_rotary(q, cos, sin)
-    k = L.apply_rotary(k, cos, sin)
+    q, k, v = _project_qkv(params, cfg, x, pos_b[:, None])
     slot = pos % S if cfg.window else pos
     cache = dict(cache)
     cache = _write_cache(cache, "k", k, slot, cfg.kv_quant)
     cache = _write_cache(cache, "v", v, slot, cfg.kv_quant)
+    y = _cache_attend(params, cfg, x, cache, q, pos_b)
+    return y, cache
 
+
+def _cache_attend(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, 1, d_model)
+    cache: dict,                    # (B, S, ...) leaves — dense OR paged view
+    q: jax.Array,                   # (B, 1, H, D) post-rotary query
+    pos_b: jax.Array,               # (B,)
+) -> jax.Array:
+    """The decode attention *read*: one-shot softmax (fp caches) or chunked
+    flash-decode with fused dequant (int8 caches) over a ``(B, S, ...)``
+    cache tree.  Shared verbatim by the dense contiguous cache and the
+    paged path (which first materialises the logical view with the
+    block-table gather) — running the identical program on bit-identical
+    values is what makes paged decode bit-equal to dense decode."""
+    B = x.shape[0]
+    S = cache["k"].shape[1]
     H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     rep = H // KV
     qh = q.reshape(B, KV, rep, D)
@@ -349,8 +368,7 @@ def attn_decode_step(
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bgrs,bsgd->bgrd", p.astype(cv.dtype), cv)
         o = o.reshape(B, 1, H, D).astype(x.dtype)
-        y = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
-        return y, cache
+        return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
     # int8 cache: flash-decode chunks bound the dequant temp
     # (EXPERIMENTS.md SecPerf iteration 1: -21 GB on qwen1.5-32b decode_32k)
     chunk = min(8192, S)
@@ -392,6 +410,175 @@ def attn_decode_step(
     (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
     o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
     o = o.reshape(B, 1, H, D)
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (DESIGN.md §3b): pool + block-table addressing.
+#
+# Layout: each cache leaf becomes a POOL ``(n_blocks, block_size, ...)``
+# shared by all batch rows; a per-row block table ``(B, n_logical)`` maps
+# logical block l of row b to a physical block (``n_logical * block_size ==
+# max_seq``).  Physical block 0 is the reserved sentinel: unassigned table
+# entries point at it and out-of-coverage writes are redirected into it —
+# its contents are finite garbage that the causal mask annihilates exactly
+# (``exp(NEG_INF - m) == 0.0`` in fp32), so reads through it can never
+# perturb live rows.  The read path gathers the logical ``(B, max_seq,
+# ...)`` view (Pallas block-table gather on TPU, ``jnp.take`` elsewhere —
+# ``kernels/paged_gather.py``) and then runs the UNCHANGED dense math
+# (:func:`_cache_attend` / :func:`flash_attention`), which is what makes
+# paged serving bit-identical to the dense contiguous cache.
+# ---------------------------------------------------------------------------
+
+
+def paged_view(cache: dict, table: jax.Array) -> dict:
+    """Materialise the logical contiguous view of a paged cache tree:
+    pools ``(n_blocks, bs, ...)`` + table ``(B, L)`` -> ``(B, L·bs, ...)``
+    leaves, gathered with the block-table kernel."""
+    from repro.kernels.paged_gather import gather_blocks
+
+    return {name: gather_blocks(pool, table) for name, pool in cache.items()}
+
+
+def paged_route(
+    table: jax.Array,               # (B, L) block table
+    positions: jax.Array,           # (B, T) absolute cache positions
+    block_size: int,
+    valid: jax.Array | None = None, # extra (B, T) mask (e.g. pad positions)
+) -> tuple[jax.Array, jax.Array]:
+    """THE block-table write routing: absolute positions -> ``(phys, off)``
+    scatter targets.  Positions past the table span — and any caller-masked
+    positions — are redirected to the sentinel block 0.  Every paged write
+    path (per-token, prefill span, shadow-chunk writeback) routes through
+    this one definition, because the sentinel-redirect invariant is what
+    the paged bit-identity contract stands on."""
+    L = table.shape[1]
+    lb = jnp.minimum(positions // block_size, L - 1)
+    ok = positions < L * block_size
+    if valid is not None:
+        ok = ok & valid
+    phys = jnp.where(ok, jnp.take_along_axis(table, lb, axis=1), 0)
+    return phys, positions % block_size
+
+
+def _paged_write_token(
+    cache: dict, name: str, val: jax.Array, table: jax.Array,
+    pos_b: jax.Array, quant: bool,
+) -> dict:
+    """Write one decode token's K or V into its pool block: the T=1 case of
+    :func:`paged_write_span` (per-row start ``pos_b``, every position
+    real).  ``lengths = pos_b + 1`` makes the span's pad mask vacuous while
+    keeping its out-of-coverage sentinel redirect — one definition of the
+    write routing the bit-identity contract depends on."""
+    return paged_write_span(cache, name, val, table, pos_b, pos_b + 1, quant)
+
+
+def paged_write_span(
+    cache: dict, name: str, val: jax.Array, table: jax.Array,
+    start: jax.Array, lengths: jax.Array, quant: bool,
+) -> dict:
+    """Scatter a span of K or V into pool blocks.
+
+    ``val (B, T, KV, D)`` holds positions ``start + t`` (``start`` scalar —
+    grouped admission prefill — or per-row ``(B,)`` — decode steps); rows
+    are right-padded — positions ``>= lengths[b]`` are redirected to the
+    sentinel block so pad K/V never lands in a real block (the dense path
+    keeps pad KV in its private row, where causality hides it; a shared
+    pool has no private rows, so pads must be discarded at write time).
+    The same redirect absorbs positions past the table span: fixed-shape
+    chunks overrun finished rows, and retired slots' table rows are reset
+    to sentinel — duplicate sentinel writes are unordered but the sentinel
+    is never attendable.
+    """
+    pool = cache[name]
+    B, T = val.shape[:2]
+    bs = pool.shape[1]
+    starts = jnp.reshape(jnp.asarray(start), (-1, 1))      # scalar or (B,)
+    positions = jnp.broadcast_to(starts + jnp.arange(T)[None, :], (B, T))
+    phys, off = paged_route(table, positions, bs,
+                            valid=positions < lengths[:, None])
+    if quant:
+        qv, sc = _kv_quantize(val)
+        cache[name] = pool.at[phys, off].set(qv)
+        cache[name + "_scale"] = cache[name + "_scale"].at[phys, off].set(sc)
+    else:
+        cache[name] = pool.at[phys, off].set(val.astype(pool.dtype))
+    return cache
+
+
+def attn_decode_step_paged(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, 1, d_model)
+    cache: dict,                    # POOL leaves (n_blocks, bs, ...)
+    table: jax.Array,               # (B, n_logical) int32 block table
+    pos: jax.Array,                 # (B,) absolute positions
+) -> tuple[jax.Array, dict]:
+    """One-token decode against the paged pool: identical QKV math, writes
+    routed through the block table, then :func:`_cache_attend` on the
+    gathered logical view — bit-identical to :func:`attn_decode_step` on
+    the dense contiguous cache (tested in ``tests/test_kv_pool.py``)."""
+    assert cfg.window is None and cfg.kv_lora_rank is None, (
+        "paged KV supports full-attention GQA layers only"
+    )
+    B = x.shape[0]
+    pos_b = jnp.broadcast_to(pos, (B,))
+    q, k, v = _project_qkv(params, cfg, x, pos_b[:, None])
+    cache = dict(cache)
+    cache = _paged_write_token(cache, "k", k, table, pos_b, cfg.kv_quant)
+    cache = _paged_write_token(cache, "v", v, table, pos_b, cfg.kv_quant)
+    y = _cache_attend(params, cfg, x, paged_view(cache, table), q, pos_b)
+    return y, cache
+
+
+def attn_prefill_paged(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, Ts, d_model) — the UNCACHED suffix
+    positions: jax.Array,           # (B, Ts) absolute positions (start + t)
+    cache: dict,                    # POOL leaves (n_blocks, bs, ...)
+    table: jax.Array,               # (B, n_logical)
+    lengths: jax.Array,             # (B,) true total prompt lengths
+    start: jax.Array,               # scalar: first uncached position
+    chunk: int = 1024,
+    view_blocks: int | None = None, # static: table columns the attention
+                                    # view needs (covers start + T); None =
+                                    # all (the full max_seq view)
+) -> tuple[jax.Array, dict]:
+    """Suffix prefill into pool blocks: the prefix-cache hit path computes
+    only positions ``start..len-1`` (a prefix hit makes ``start > 0``).
+
+    Attention runs over the logical view with the freshly computed span
+    **overlaid raw** (``dynamic_update_slice`` at ``start``): positions
+    ``< start`` come from reused blocks (bit-equal to a full prefill's
+    values by induction), the suffix attends its own raw K/V exactly as a
+    full prefill would — including under ``kv_quant``, where the pool
+    stores int8 but prefill attention must see raw values to stay
+    bit-identical to the dense path (which only quantizes at cache-store
+    time).  Chunks beyond a query's causal range are exact no-ops in the
+    online softmax (``corr == exp(0) == 1``), so the view's ``max_seq``
+    length vs. the dense path's padded prompt length cannot change a single
+    bit.
+    """
+    assert cfg.window is None and cfg.kv_lora_rank is None, (
+        "paged KV supports full-attention GQA layers only"
+    )
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cache = dict(cache)
+    cache = paged_write_span(cache, "k", k, table, start, lengths, cfg.kv_quant)
+    cache = paged_write_span(cache, "v", v, table, start, lengths, cfg.kv_quant)
+    # The view only needs the causally reachable range (<= start + T): any
+    # chunk past the last query position is an exact online-softmax no-op,
+    # so truncating to a static block count changes no bits but cuts the
+    # flash sweep from max_seq to ~the padded prompt length — the same
+    # work the dense prefill does.
+    view = paged_view(cache, table if view_blocks is None
+                      else table[:, :view_blocks])
+    ck = _read_cache(view, "k", cfg.kv_quant, x.dtype)
+    cv = _read_cache(view, "v", cfg.kv_quant, x.dtype)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), start, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), start, axis=1)
+    o = flash_attention(q, ck, cv, causal=True, q_offset=start, chunk=chunk)
     y = jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
     return y, cache
 

@@ -178,6 +178,42 @@ def block_init_cache(
     raise ValueError(blk.kind)
 
 
+def block_supports_paging(blk: BlockCfg) -> bool:
+    """Paged KV (DESIGN.md §3b) covers full-attention GQA layers: windowed
+    ring buffers already bound their cache to ``window`` slots, MLA latents
+    and SSM/LSTM states are per-sequence (not per-token) — none of them
+    strand per-token HBM the way a dense ``max_seq`` KV row does."""
+    return (
+        blk.kind in ("attn_mlp", "attn_moe", "attn_kan")
+        and blk.attn.kv_lora_rank is None
+        and blk.attn.window is None
+    )
+
+
+def block_init_paged_cache(
+    blk: BlockCfg, n_blocks: int, block_size: int, dtype
+) -> dict:
+    """Pool-shaped decode cache: ``(n_blocks, block_size, ...)`` leaves in
+    place of :func:`block_init_cache`'s ``(batch, max_seq, ...)`` rows.
+    Physical block 0 is the engine's reserved sentinel (``serve/kv_pool.py``).
+    """
+    if not block_supports_paging(blk):
+        raise NotImplementedError(
+            f"paged KV cache: unsupported block kind {blk.kind!r} "
+            "(full-attention GQA layers only)"
+        )
+    c = blk.attn
+    kv_dtype = jnp.int8 if c.kv_quant else dtype
+    cache = {
+        "k": jnp.zeros((n_blocks, block_size, c.n_kv_heads, c.head_dim), kv_dtype),
+        "v": jnp.zeros((n_blocks, block_size, c.n_kv_heads, c.head_dim), kv_dtype),
+    }
+    if c.kv_quant:
+        cache["k_scale"] = jnp.zeros((n_blocks, block_size, c.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((n_blocks, block_size, c.n_kv_heads), jnp.float32)
+    return cache
+
+
 def block_prefill(
     params: dict,
     blk: BlockCfg,
@@ -245,6 +281,62 @@ def block_prefill(
     return x + y, st
 
 
+def block_prefill_paged(
+    params: dict,
+    blk: BlockCfg,
+    x: jax.Array,                  # (B, Ts, d) — uncached suffix tokens only
+    *,
+    positions: jax.Array,          # (B, Ts) absolute positions
+    cache: dict,                   # pool leaves (n_blocks, bs, ...)
+    table: jax.Array,              # (B, n_logical)
+    lengths: jax.Array,            # (B,) true total prompt lengths
+    start: jax.Array,              # scalar: first uncached position
+    chunk: int = 1024,
+    view_blocks: int | None = None,
+) -> tuple[jax.Array, dict]:
+    """Suffix prefill writing K/V straight into pool blocks — the paged
+    counterpart of :func:`block_prefill` (which pads a private cache row to
+    ``max_seq`` for splicing).  Prefix-cache hits enter with ``start > 0``
+    and skip the cached positions entirely."""
+    if not block_supports_paging(blk):
+        raise NotImplementedError(f"paged prefill: unsupported kind {blk.kind!r}")
+    h = L.rmsnorm(params["ln1"], x)
+    y, cache = A.attn_prefill_paged(
+        params["attn"], blk.attn, h, positions, cache, table, lengths, start,
+        chunk=chunk, view_blocks=view_blocks,
+    )
+    x = x + y
+    h2 = L.rmsnorm(params["ln2"], x)
+    if blk.kind == "attn_mlp":
+        x = x + _mlp(params["mlp"], h2)
+    elif blk.kind == "attn_moe":
+        y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
+        x = x + y2
+    else:
+        # same batch-regime-aware inference path as block_prefill — row
+        # counts differ (suffix only), but every KAN method is row-wise
+        x = x + _kan_ffn(params["kan"], h2, blk.kan_grid, method="auto")
+    return x, cache
+
+
+def block_paged_cache_axes(blk: BlockCfg) -> dict:
+    """Logical axes of the pool-shaped cache (mirrors
+    :func:`block_init_paged_cache`): the batch axis is gone — sharding can
+    split the pool along ``kv_blocks`` (the paged analogue of
+    ``seq_cache``) or the head axes."""
+    from repro.models.layers import Axes
+
+    assert block_supports_paging(blk)
+    axes = {
+        "k": Axes(("kv_blocks", None, "kv_heads", "head_dim")),
+        "v": Axes(("kv_blocks", None, "kv_heads", "head_dim")),
+    }
+    if blk.attn.kv_quant:
+        axes["k_scale"] = Axes(("kv_blocks", None, "kv_heads"))
+        axes["v_scale"] = Axes(("kv_blocks", None, "kv_heads"))
+    return axes
+
+
 def block_cache_axes(blk: BlockCfg) -> dict:
     """Logical axes of the decode state (mirrors block_init_cache).
 
@@ -289,11 +381,18 @@ def block_decode_step(
     x: jax.Array,               # (B, 1, d)
     cache: dict,
     pos: jax.Array,             # (B,)
+    table: jax.Array | None = None,   # (B, n_logical): paged block table
 ) -> tuple[jax.Array, dict]:
     h = L.rmsnorm(params["ln1"], x)
+    if table is not None and not block_supports_paging(blk):
+        raise NotImplementedError(f"paged decode: unsupported kind {blk.kind!r}")
     if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
         c = blk.attn
-        if c.kv_lora_rank is not None:
+        if table is not None:
+            y, cache = A.attn_decode_step_paged(
+                params["attn"], c, h, cache, table, pos
+            )
+        elif c.kv_lora_rank is not None:
             y, ckv = A.mla_decode_step(params["attn"], c, h, cache["ckv"], pos)
             cache = {"ckv": ckv}
         else:

@@ -235,6 +235,169 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) 
     return caches
 
 
+def model_supports_paging(cfg: ModelConfig) -> bool:
+    """Every block must hold a full-attention GQA KV cache (DESIGN.md §3b)."""
+    blks = cfg.prologue + cfg.unit + cfg.epilogue + cfg.shared
+    return all(B.block_supports_paging(b) for b in blks)
+
+
+def model_kv_quant(cfg: ModelConfig) -> bool:
+    """True if any attention block stores an int8-quantized KV cache."""
+    blks = cfg.prologue + cfg.unit + cfg.epilogue + cfg.shared
+    return any(b.attn is not None and b.attn.kv_quant for b in blks)
+
+
+def init_paged_caches(
+    cfg: ModelConfig, n_blocks: int, block_size: int, dtype=jnp.bfloat16
+) -> dict:
+    """Pool-shaped caches: one ``(n_blocks, block_size, ...)`` pool per
+    layer, all layers addressed by the SAME physical block id (vLLM-style —
+    one allocation covers a token's KV across the whole depth).  Structure
+    mirrors :func:`init_caches` (unit pools stacked on the layers axis) so
+    the decode scan machinery is unchanged."""
+    if not model_supports_paging(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: paged KV needs full-attention GQA blocks throughout"
+        )
+    caches: dict = {}
+    if cfg.prologue:
+        caches["prologue"] = [
+            B.block_init_paged_cache(b, n_blocks, block_size, dtype)
+            for b in cfg.prologue
+        ]
+    unit_caches = []
+    for blk in cfg.unit:
+        one = B.block_init_paged_cache(blk, n_blocks, block_size, dtype)
+        unit_caches.append(
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape).copy(),
+                one,
+            )
+        )
+    caches["unit"] = unit_caches
+    if cfg.epilogue:
+        caches["epilogue"] = [
+            B.block_init_paged_cache(b, n_blocks, block_size, dtype)
+            for b in cfg.epilogue
+        ]
+    return caches
+
+
+def paged_cache_axes(cfg: ModelConfig) -> dict:
+    """Logical-axes tree mirroring :func:`init_paged_caches` (the paged
+    counterpart of :func:`cache_axes`): pools carry ``kv_blocks`` where the
+    dense rows carried ``batch``/``seq_cache``."""
+    from repro.models.layers import Axes
+
+    axes: dict = {}
+    if cfg.prologue:
+        axes["prologue"] = [B.block_paged_cache_axes(b) for b in cfg.prologue]
+    axes["unit"] = [
+        jax.tree.map(
+            lambda a: Axes(("layers",) + a.names),
+            B.block_paged_cache_axes(b),
+            is_leaf=lambda x: isinstance(x, Axes),
+        )
+        for b in cfg.unit
+    ]
+    if cfg.epilogue:
+        axes["epilogue"] = [B.block_paged_cache_axes(b) for b in cfg.epilogue]
+    return axes
+
+
+def _map_paged_leaves(caches: dict, fn) -> dict:
+    """Apply ``fn(leaf, stacked)`` over a paged-cache tree: unit pools carry
+    a leading layers axis (``stacked=True``), prologue/epilogue don't."""
+    out: dict = {}
+    if "prologue" in caches:
+        out["prologue"] = [
+            {k: fn(a, False) for k, a in c.items()} for c in caches["prologue"]
+        ]
+    out["unit"] = [
+        {k: fn(a, True) for k, a in c.items()} for c in caches["unit"]
+    ]
+    if "epilogue" in caches:
+        out["epilogue"] = [
+            {k: fn(a, False) for k, a in c.items()} for c in caches["epilogue"]
+        ]
+    return out
+
+
+def paged_views(caches: dict, table: jax.Array) -> dict:
+    """Gather the logical dense view of every pool leaf: the result tree is
+    shaped exactly like :func:`init_caches` (batch = table rows, seq =
+    n_logical·block_size), so the UNCHANGED dense decode program runs on it.
+
+    This is the engine's "shadow" read path (DESIGN.md §3b): gather ONCE
+    per decode chunk, run the dense scan on the view, write the chunk's
+    span back with :func:`writeback_paged_chunk` — amortizing the gather
+    over ``chunk_steps`` instead of paying it every token.  The transient
+    view costs ``slots x max_seq`` per layer (the dense *decode-batch*
+    footprint; the pool remains the only persistent KV store)."""
+    from repro.kernels.paged_gather import gather_blocks
+
+    def leaf(pool, stacked):
+        if stacked:
+            return jax.vmap(lambda p: gather_blocks(p, table))(pool)
+        return gather_blocks(pool, table)
+
+    return _map_paged_leaves(caches, leaf)
+
+
+def writeback_paged_chunk(
+    caches: dict, view: dict, table: jax.Array, pos0: jax.Array, steps: int
+) -> dict:
+    """Scatter a finished chunk's writes from the dense shadow ``view``
+    back into the pools.
+
+    The dense scan wrote rows only at positions ``pos0[b] .. pos0[b] +
+    steps - 1`` (latched rows rewrite their frozen slot; untouched
+    positions in that window still hold the gathered pool values, so
+    copying them back is an exact no-op).  Out-of-span positions (chunk
+    overrun past ``max_seq``) are redirected to the sentinel block,
+    mirroring the per-step write path."""
+
+    from repro.models.attention import paged_route
+
+    def leaf(pool, v, stacked):
+        if stacked:
+            return jax.vmap(lambda p, vv: leaf(p, vv, False))(pool, v)
+        bs = pool.shape[1]
+        B, S = v.shape[:2]
+        positions = pos0[:, None] + jnp.arange(steps)[None, :]   # (B, steps)
+        pos_cl = jnp.minimum(positions, S - 1)                   # view read idx
+        rest = v.ndim - 2
+        idx = pos_cl.reshape((B, steps) + (1,) * rest)
+        vals = jnp.take_along_axis(v, idx, axis=1)               # (B,steps,...)
+        phys, off = paged_route(table, positions, bs)
+        return pool.at[phys, off].set(vals.astype(pool.dtype))
+
+    pooled = _map_paged_leaves(caches, lambda a, s: (a, s))
+    return jax.tree.map(
+        lambda ps, v: leaf(ps[0], v, ps[1]),
+        pooled, view,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def copy_paged_block(caches: dict, src, dst) -> dict:
+    """Device-side copy of physical block ``src`` -> ``dst`` in every pool
+    leaf — the data half of copy-on-write (``kv_pool.BlockPool.copy_on_write``
+    rebinds the table; this copies the KV payload).  ``src``/``dst`` may be
+    traced scalars; one jitted program serves every pair."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def copy_leaf(pool, stacked: bool):
+        # unit pools carry a leading layers axis, so their block axis is 1;
+        # prologue/epilogue pools index blocks at axis 0
+        ax = 1 if stacked else 0
+        blk = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(pool, blk, dst, axis=ax)
+
+    return _map_paged_leaves(caches, copy_leaf)
+
+
 def prefill(
     params: dict,
     cfg: ModelConfig,
@@ -415,6 +578,96 @@ def prefill_into_slots(
     return last, caches
 
 
+def prefill_into_pages(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,           # (k, Ts_pad) int32, right-padded SUFFIX tokens
+    lengths: jax.Array,          # (k,) int32 true TOTAL prompt lengths
+    tables: jax.Array,           # (k, n_logical) int32 block tables
+    caches: dict,                # paged pools (init_paged_caches)
+    start,                       # scalar int32: first uncached position
+    compute_dtype=jnp.bfloat16,
+    view_blocks: int | None = None,   # STATIC attention-view truncation:
+                                      # table columns covering start + Ts
+                                      # (bit-identical — see attn_prefill_paged)
+) -> tuple[jax.Array, dict]:
+    """Paged admission prefill: compute ONLY the uncached suffix (positions
+    ``start .. len-1``; a prefix-cache hit makes ``start > 0``) and scatter
+    its K/V into the pool blocks mapped by ``tables``.
+
+    The paged counterpart of :func:`prefill_into_slots` — no private cache
+    row is built or spliced; blocks are written in place.  Returns
+    ``(last_logits (k, vocab), caches)`` with ``last_logits`` taken at each
+    request's last real token (row ``lengths - 1 - start`` of the suffix).
+    Jit callers retrace once per ``(k, Ts_pad)`` group shape; ``lengths``,
+    ``tables`` and ``start`` stay traced (admission groups bucket by
+    ``(start, Ts_pad)``).  Bit-identity to the dense path: suffix K/V and
+    logits are computed by the same per-position math
+    (``attention._project_qkv`` / ``flash_attention`` with exact no-op
+    masked chunks — see ``attn_prefill_paged``), and under ``kv_quant`` the
+    engine forces ``start = 0`` so prefill attention sees raw values
+    exactly like the dense path.
+    """
+    k, Ts = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    h = _embed_inputs(params, cfg, {"tokens": tokens}, compute_dtype)
+    positions = start + jnp.arange(Ts)[None, :]
+    shared = params.get("shared", [])
+    new_caches: dict = {}
+
+    def apply(p_blk, blk, h, cache):
+        p = shared[blk.shared_id] if blk.shared_id is not None else p_blk
+        return B.block_prefill_paged(
+            p, blk, h, positions=positions, cache=cache, table=tables,
+            lengths=lengths, start=start, chunk=cfg.attn_chunk,
+            view_blocks=view_blocks,
+        )
+
+    if cfg.prologue:
+        pcs = []
+        for p_blk, blk, c in zip(params["prologue"], cfg.prologue, caches["prologue"]):
+            h, c2 = apply(p_blk, blk, h, c)
+            pcs.append(c2)
+        new_caches["prologue"] = pcs
+
+    def unit_body(h_carry, xs):
+        rep_params, rep_caches = xs
+        new_rep = []
+        for i, blk in enumerate(cfg.unit):
+            h_carry, c2 = apply(rep_params[i], blk, h_carry, rep_caches[i])
+            new_rep.append(c2)
+        return h_carry, new_rep
+
+    if cfg.scan_layers:
+        h, new_unit = jax.lax.scan(unit_body, h, (params["unit"], caches["unit"]))
+    else:
+        reps = []
+        for r in range(cfg.n_repeats):
+            rep_p = jax.tree.map(lambda a: a[r], params["unit"])
+            rep_c = jax.tree.map(lambda a: a[r], caches["unit"])
+            h, nc = unit_body(h, (rep_p, rep_c))
+            reps.append(nc)
+        new_unit = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    new_caches["unit"] = new_unit
+
+    if cfg.epilogue:
+        ecs = []
+        for p_blk, blk, c in zip(params["epilogue"], cfg.epilogue, caches["epilogue"]):
+            h, c2 = apply(p_blk, blk, h, c)
+            ecs.append(c2)
+        new_caches["epilogue"] = ecs
+
+    h = L.rmsnorm(params["final_ln"], h)
+    logits = L.unembed_logits(params["embed"], h)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1 - start)[:, None, None], axis=1
+    )[:, 0]
+    return last, new_caches
+
+
 def decode_step(
     params: dict,
     cfg: ModelConfig,
@@ -422,8 +675,14 @@ def decode_step(
     caches: dict,
     pos: jax.Array,              # (B,)
     compute_dtype=jnp.bfloat16,
+    table: jax.Array | None = None,   # (B, n_logical): paged block tables
 ) -> tuple[jax.Array, dict]:
-    """One decode step for the whole model -> (logits (B, vocab), caches)."""
+    """One decode step for the whole model -> (logits (B, vocab), caches).
+
+    With ``table`` set, ``caches`` holds paged pools
+    (:func:`init_paged_caches`) and every block reads/writes through the
+    block table (DESIGN.md §3b); the same physical block id addresses every
+    layer's pool."""
     d = cfg.d_model
     if cfg.input_kind == "tokens" or cfg.input_kind == "mixed":
         h = L.embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(d)
@@ -437,7 +696,7 @@ def decode_step(
     if cfg.prologue:
         ncs = []
         for p_blk, blk, c in zip(params["prologue"], cfg.prologue, caches["prologue"]):
-            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos)
+            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos, table)
             ncs.append(c2)
         new_caches["prologue"] = ncs
 
@@ -447,7 +706,7 @@ def decode_step(
         new_rep = []
         for i, blk in enumerate(cfg.unit):
             p = shared[blk.shared_id] if blk.shared_id is not None else rep_params[i]
-            h_c, c2 = B.block_decode_step(p, blk, h_c, rep_caches[i], pos)
+            h_c, c2 = B.block_decode_step(p, blk, h_c, rep_caches[i], pos, table)
             new_rep.append(c2)
         return h_c, new_rep
 
@@ -466,7 +725,7 @@ def decode_step(
     if cfg.epilogue:
         ncs = []
         for p_blk, blk, c in zip(params["epilogue"], cfg.epilogue, caches["epilogue"]):
-            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos)
+            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos, table)
             ncs.append(c2)
         new_caches["epilogue"] = ncs
 

@@ -16,7 +16,10 @@ Two serving drivers share that program:
   (``chunk_steps``-long scans with per-row EOS latching) and swaps finished
   slots for queued requests between chunks via
   ``lm.prefill_into_slots`` — queued requests' KV is prefilled and spliced into
-  a live batch cache row.
+  a live batch cache row.  With ``ServeConfig.paged`` the dense per-slot
+  cache rows become a block pool with per-request block tables, prefix
+  caching, and preemption-with-recompute (DESIGN.md §3b) — same outputs,
+  bit for bit.
 
 Padding is **right**-padding with per-request start offsets: real tokens
 sit at positions ``0..len-1``, causal attention means no real token ever
@@ -57,6 +60,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serve.kv_pool import BlockPool, blocks_for, worst_case_blocks
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import ContinuousScheduler
 
 
@@ -69,6 +74,27 @@ class ServeConfig:
     pad_id: int = 0              # emitted after a row latches on EOS
     compute_dtype: str = "float32"
     decode_impl: str = "scan"    # "scan" (one compiled program) | "loop"
+    # Paged KV cache (DESIGN.md §3b): carve the cache into fixed-size
+    # blocks bound to requests on demand (serve/kv_pool.py), dedup shared
+    # prompt prefixes (serve/prefix_cache.py), and preempt-with-recompute
+    # on pool exhaustion.  Affects serve_continuous only; bit-identical to
+    # the dense path.
+    paged: bool = False
+    block_size: int = 16         # must divide max_seq
+    pool_blocks: int | None = None   # physical blocks incl. sentinel;
+                                     # None -> slots·(max_seq/block_size)+1
+                                     # (dense-equivalent capacity)
+    prefix_caching: bool = True  # auto-disabled under int8 KV quant (the
+                                 # dense path attends RAW prefill K/V;
+                                 # reused blocks could only supply
+                                 # dequantized values — bit-identity first)
+    # Decode read path: "shadow" gathers the dense view ONCE per chunk,
+    # runs the unchanged dense scan on it, and writes the chunk's span back
+    # to the pools (gather amortized over chunk_steps; transient
+    # slots x max_seq view).  "step" reads/writes through the block table
+    # every token — the shape a fused TPU paged-attention kernel runs, and
+    # the path with no transient view.  Both are bit-identical (tested).
+    paged_read: str = "shadow"
 
 
 class Engine:
@@ -78,6 +104,8 @@ class Engine:
         self.cfg = serve_cfg
         self._dt = jnp.float32 if serve_cfg.compute_dtype == "float32" else jnp.bfloat16
         self.last_serve_stats: dict | None = None
+        self._last_pool = None      # paged-mode introspection (tests/bench)
+        self._last_prefix = None
 
         self._prefill = jax.jit(
             lambda p, inputs: lm.prefill(
@@ -107,9 +135,29 @@ class Engine:
             ),
             donate_argnums=(4,),
         )
+        # paged admission: suffix prefill scattered straight into pool
+        # blocks.  view_blocks is STATIC (it truncates the attention view
+        # to the causally reachable blocks — same flash sweep the dense
+        # prefill does), so callers retrace per (group size, padded suffix
+        # length, view blocks); the prefix start offset stays traced.
+        self._prefill_pages = jax.jit(
+            lambda p, toks, lengths, tables, caches, start, view_blocks:
+                lm.prefill_into_pages(
+                    p, self.model, toks, lengths, tables, caches, start,
+                    self._dt, view_blocks,
+                ),
+            donate_argnums=(4,), static_argnums=(6,),
+        )
         # per-row key derivation + first-token sampling, shared by generate
         # and slot admission (jitted: the eager vmap path costs ms per call)
         self._keys_first = jax.jit(self._keys_first_impl)
+        # paged "shadow" read path: per-chunk view gather + span writeback
+        self._gather_views = jax.jit(lm.paged_views)
+        self._writeback_chunk = jax.jit(
+            lm.writeback_paged_chunk, static_argnums=(4,),
+            donate_argnums=(0,),   # pools update in place; the view's
+                                   # shapes can't alias the pool buffers
+        )
 
     # ------------------------------------------------------------------
     # per-row PRNG: key chain = fold_in(base, request_id), split per token
@@ -141,8 +189,26 @@ class Engine:
             lambda k, lg: jax.random.categorical(k, lg / t)
         )(step_keys, logits).astype(jnp.int32)
 
+    def _validate_request(self, rid, prompt_len: int, max_new: int) -> None:
+        """Per-request admission validation (clear errors instead of a
+        deep-in-trace assert): the prompt plus its token budget must fit
+        the engine's ``max_seq``."""
+        if max_new < 1:
+            raise ValueError(
+                f"request {rid}: max_new must be >= 1, got {max_new}"
+            )
+        if prompt_len < 1:
+            raise ValueError(
+                f"request {rid}: empty prompt (prompt_len={prompt_len})"
+            )
+        if prompt_len + max_new > self.cfg.max_seq:
+            raise ValueError(
+                f"request {rid}: prompt_len {prompt_len} + max_new {max_new} "
+                f"= {prompt_len + max_new} exceeds max_seq {self.cfg.max_seq}"
+            )
+
     def _scan_impl(self, steps, params, tok0, caches, pos0, keys0, eos_hit0,
-                   eos_id, pad_id):
+                   eos_id, pad_id, table=None):
         """(steps static) scan body == one loop iteration of the unrolled
         decode, so scan and loop are bit-identical (tested).
 
@@ -159,7 +225,7 @@ class Engine:
         def body(carry, _):
             tok, caches, pos, keys, eos_hit = carry
             lg, caches = lm.decode_step(
-                params, self.model, tok, caches, pos, self._dt
+                params, self.model, tok, caches, pos, self._dt, table
             )
             pairs = jax.vmap(jax.random.split)(keys)
             keys, kt = pairs[:, 0], pairs[:, 1]
@@ -205,14 +271,22 @@ class Engine:
         B, T = prompts.shape
         max_new = self.cfg.max_new_tokens if max_new is None else int(max_new)
         eos = self.cfg.eos_id if eos_id is None else int(eos_id)
-        assert max_new >= 1 and T + max_new <= self.cfg.max_seq
-        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
         rids = (
             np.arange(B, dtype=np.int32)
             if request_ids is None
             else np.asarray(request_ids, np.int32)
         )
         assert rids.shape == (B,)
+        # per-request validation (was a bare deep-in-trace assert): each
+        # row's true prompt length + budget must fit max_seq
+        row_lens = np.full((B,), T) if lengths is None else np.asarray(lengths)
+        for b in range(B):
+            self._validate_request(int(rids[b]), int(row_lens[b]), max_new)
+        if T > self.cfg.max_seq:
+            raise ValueError(
+                f"padded prompt length {T} exceeds max_seq {self.cfg.max_seq}"
+            )
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
         if lengths is None:
             last = logits[:, T - 1]
             # synchronized decode (scalar position): collective-free writes
@@ -351,8 +425,22 @@ class Engine:
         to a solo :meth:`generate` call with the same ``request_id`` (its
         index in ``requests``), for greedy AND sampled decoding.
 
-        Sets ``self.last_serve_stats`` (scheduler counters, per-request
-        latency, wall time) for the serving benchmark.
+        With ``cfg.paged`` (DESIGN.md §3b) the KV cache is a block pool
+        (``serve/kv_pool.py``) instead of dense per-slot rows: admission is
+        allocation-aware (a request only enters a slot when its prompt's
+        blocks are available), shared prompt prefixes reuse cached blocks
+        (``serve/prefix_cache.py`` — prefill computes only the uncached
+        suffix), and pool exhaustion first evicts LRU prefix entries, then
+        preempts the youngest running request (freed blocks, requeued at
+        the queue head, restarted from scratch on re-admission —
+        recompute regenerates the identical token stream).  All of it holds
+        the same contract: outputs stay bit-identical to solo
+        :meth:`generate`.
+
+        Sets ``self.last_serve_stats`` (scheduler counters incl.
+        ``n_preemptions``, per-request latency, wall time; paged mode adds
+        a ``"paged"`` sub-dict with pool/prefix counters and
+        prefill-tokens-saved) for the serving benchmarks.
         """
         n = len(requests)
         if max_new is None:
@@ -363,14 +451,65 @@ class Engine:
             budgets = [int(m) for m in max_new]
             assert len(budgets) == n
         eos, pad = self.cfg.eos_id, self.cfg.pad_id
-        for r, m in zip(requests, budgets):
-            assert m >= 1 and r.shape[0] + m <= self.cfg.max_seq, (
-                f"prompt {r.shape[0]} + max_new {m} > max_seq {self.cfg.max_seq}"
-            )
+        for rid, (r, m) in enumerate(zip(requests, budgets)):
+            self._validate_request(rid, int(r.shape[0]), m)
         assert chunk_steps >= 1 and slots >= 1
 
         sched = ContinuousScheduler(slots, range(n))
-        caches = lm.init_caches(self.model, slots, self.cfg.max_seq, self._dt)
+        paged = self.cfg.paged
+        if paged:
+            if self.cfg.paged_read not in ("shadow", "step"):
+                raise ValueError(
+                    f"paged_read must be 'shadow' or 'step', "
+                    f"got {self.cfg.paged_read!r}"
+                )
+            bs_blk = self.cfg.block_size
+            if bs_blk < 1 or self.cfg.max_seq % bs_blk:
+                raise ValueError(
+                    f"block_size {bs_blk} must divide max_seq {self.cfg.max_seq}"
+                )
+            n_logical = self.cfg.max_seq // bs_blk
+            pool_blocks = self.cfg.pool_blocks
+            if pool_blocks is None:
+                # default: dense-equivalent capacity (+ the sentinel)
+                pool_blocks = slots * n_logical + 1
+            if pool_blocks < 2:
+                raise ValueError(
+                    f"pool_blocks must be >= 2 (the reserved sentinel plus "
+                    f"at least one usable block), got {pool_blocks}"
+                )
+            pool = BlockPool(pool_blocks, bs_blk)
+            # paged admission validation: any single request must fit an
+            # otherwise-empty pool, so preemption can always make progress
+            for rid, (r, m) in enumerate(zip(requests, budgets)):
+                need = worst_case_blocks(
+                    int(r.shape[0]), m, chunk_steps, bs_blk, self.cfg.max_seq
+                )
+                if need > pool.usable:
+                    raise ValueError(
+                        f"request {rid}: worst-case footprint {need} blocks "
+                        f"(prompt {r.shape[0]} + max_new {m}, block_size "
+                        f"{bs_blk}) exceeds the pool's {pool.usable} usable "
+                        f"blocks — raise pool_blocks or shrink the request"
+                    )
+            kv_quant = lm.model_kv_quant(self.model)
+            # prefix reuse is OFF under int8 KV quant (ServeConfig note)
+            prefix = (
+                PrefixCache(bs_blk)
+                if self.cfg.prefix_caching and not kv_quant else None
+            )
+            caches = lm.init_paged_caches(self.model, pool_blocks, bs_blk, self._dt)
+            tables = np.zeros((slots, n_logical), np.int32)  # 0 == sentinel
+            tables_dev = {"arr": None, "dirty": True}  # upload-once per change
+            covered = np.zeros((slots,), np.int64)     # blocks bound per slot
+            slot_rid = np.full((slots,), -1, np.int64)
+            prefill_tok = {"computed": 0, "saved": 0}
+            key_chains: dict[int, list] = {}   # rid -> immutable hash chain
+                                               # (deferred admissions re-probe
+                                               # without re-hashing)
+        else:
+            prefix = None
+            caches = lm.init_caches(self.model, slots, self.cfg.max_seq, self._dt)
         # host mirrors of the per-slot device state fed to each chunk
         tok = np.zeros((slots, 1), np.int32)
         pos = np.zeros((slots,), np.int32)
@@ -388,6 +527,32 @@ class Engine:
             out[: len(got)] = got
             outputs[rid] = out
             latency[rid] = time.perf_counter() - t0
+
+        def activate_group(pairs, lens, last):
+            """Shared admission tail (dense AND paged): derive per-request
+            key chains + first tokens from the prefill logits, then either
+            activate each slot or retire it on the spot (budget-1 request,
+            or the very first token hit EOS).  One definition keeps the two
+            admission paths in bitwise lockstep."""
+            rids_a = jnp.asarray(np.asarray([rid for _, rid in pairs], np.int32))
+            kcs_d, firsts_d = self._keys_first(base, rids_a, last)
+            kcs, firsts = np.asarray(kcs_d), np.asarray(firsts_d)
+            for j, (b, rid) in enumerate(pairs):
+                first = int(firsts[j])
+                bufs[rid].append(first)
+                hit = eos >= 0 and first == eos
+                if sched.confirm_admit(b, rid, int(lens[j]),
+                                       budgets[rid] - 1, hit):
+                    finalize(rid)       # done at admission: the freed slot
+                    sched.retire(b)     # is refilled by the next round
+                    if paged:
+                        release_slot_blocks(b)
+                    eos_hit[b] = True
+                else:
+                    tok[b, 0] = first
+                    pos[b] = int(lens[j])
+                    keys[b] = kcs[j]
+                    eos_hit[b] = False
 
         def admit_all():
             nonlocal caches
@@ -409,7 +574,6 @@ class Engine:
                     groups.setdefault(t_pad, []).append((b, rid))
                 for t_pad, grp in sorted(groups.items()):
                     slots_a = np.asarray([b for b, _ in grp], np.int32)
-                    rids_a = np.asarray([rid for _, rid in grp], np.int32)
                     lens = np.asarray(
                         [requests[rid].shape[0] for _, rid in grp], np.int32
                     )
@@ -420,36 +584,174 @@ class Engine:
                     last, caches = self._prefill_insert(
                         self.params, padded, lens, slots_a, caches
                     )
-                    kcs_d, firsts_d = self._keys_first(
-                        base, jnp.asarray(rids_a), last
+                    activate_group(grp, lens, last)
+
+        # ---------------------- paged-mode machinery ----------------------
+
+        def release_slot_blocks(b: int) -> None:
+            """Drop slot b's block bindings (retire or preempt): the pool
+            drops the request's refs (prefix-cache-held blocks survive) and
+            the table row resets to the sentinel so the fixed-shape chunk's
+            writes for this dead row land in the trash block."""
+            pool.release_request(int(slot_rid[b]))
+            tables[b, :] = 0
+            tables_dev["dirty"] = True
+            covered[b] = 0
+            slot_rid[b] = -1
+
+        def free_up(need: int, protect_slot: int | None) -> bool:
+            """Make ``need`` blocks free: first evict LRU prefix-cache
+            entries, then preempt the youngest live request (requeued at
+            the queue head; its re-run regenerates the same tokens —
+            preemption-with-recompute).  Returns False once ``protect_slot``
+            itself was preempted (the caller stops extending it)."""
+            while pool.free_count() < need:
+                if prefix is not None and prefix.evict_lru(pool) is not None:
+                    continue
+                victim = sched.youngest_live_slot()
+                assert victim is not None, "pool exhausted with no live rows"
+                rid_v = sched.preempt(victim)
+                bufs[rid_v] = []          # restart from scratch on re-admit
+                release_slot_blocks(victim)
+                eos_hit[victim] = True
+                if victim == protect_slot:
+                    return False
+            return True
+
+        def admit_all_paged():
+            nonlocal caches
+            while True:
+                ready = sched.admit_ready()
+                if not ready:
+                    return
+                # bind blocks per request; group dispatches by
+                # (prefix start, padded suffix length)
+                groups: dict[tuple[int, int], list] = {}
+                deferred: list[int] = []
+                for b, rid in ready:
+                    toks_r = requests[rid]
+                    L = toks_r.shape[0]
+                    if prefix is not None:
+                        n_hit, hit_blocks, keys_r = prefix.match(
+                            toks_r, key_chains.get(rid)
+                        )
+                        key_chains[rid] = keys_r
+                    else:
+                        n_hit, hit_blocks, keys_r = 0, [], []
+                    start = n_hit * bs_blk
+                    n_new = blocks_for(L, bs_blk) - n_hit
+                    # share FIRST: a matched cache-only block must not be
+                    # evicted while we free room for the fresh suffix blocks
+                    pool.share(rid, hit_blocks)
+                    ok = pool.free_count() >= n_new
+                    while not ok and prefix is not None:
+                        if prefix.evict_lru(pool) is None:
+                            break
+                        ok = pool.free_count() >= n_new
+                    if not ok:
+                        # admission never preempts (that would thrash);
+                        # blocks free as running requests retire
+                        pool.release_request(rid)
+                        deferred.append(rid)
+                        continue
+                    row = hit_blocks + pool.alloc(rid, n_new)
+                    if prefix is not None:
+                        prefix.record_admission(n_hit, L)
+                    tables[b, :] = 0
+                    tables[b, : len(row)] = row
+                    tables_dev["dirty"] = True
+                    covered[b] = len(row)
+                    slot_rid[b] = rid
+                    prefill_tok["saved"] += start
+                    prefill_tok["computed"] += L - start
+                    t_pad = min(
+                        -(-(L - start) // prompt_pad_multiple) * prompt_pad_multiple,
+                        self.cfg.max_seq - start,
                     )
-                    kcs, firsts = np.asarray(kcs_d), np.asarray(firsts_d)
-                    for j, (b, rid) in enumerate(grp):
-                        first = int(firsts[j])
-                        bufs[rid].append(first)
-                        hit = eos >= 0 and first == eos
-                        if sched.confirm_admit(b, rid, int(lens[j]),
-                                               budgets[rid] - 1, hit):
-                            finalize(rid)       # done at admission: the
-                            sched.retire(b)     # freed slot is refilled by
-                            eos_hit[b] = True   # the next round of the loop
-                        else:
-                            tok[b, 0] = first
-                            pos[b] = lens[j]
-                            keys[b] = kcs[j]
-                            eos_hit[b] = False
+                    groups.setdefault((start, t_pad), []).append(
+                        (b, rid, L, keys_r)
+                    )
+                for (start, t_pad), grp in sorted(groups.items()):
+                    lens = np.asarray([L for _, _, L, _ in grp], np.int32)
+                    suffix = np.stack([
+                        np.pad(requests[rid][start:], (0, t_pad - (L - start)))
+                        for _, rid, L, _ in grp
+                    ]).astype(np.int32)
+                    tbls = jnp.asarray(tables[[b for b, *_ in grp]])
+                    last, caches = self._prefill_pages(
+                        self.params, suffix, jnp.asarray(lens), tbls, caches,
+                        jnp.int32(start), blocks_for(start + t_pad, bs_blk),
+                    )
+                    # register the freshly computed full prompt blocks so
+                    # later admissions can reuse them (first writer wins)
+                    if prefix is not None:
+                        for b, rid, L, keys_r in grp:
+                            for i, key in enumerate(keys_r):
+                                if prefix.insert(key, int(tables[b, i])):
+                                    pool.cache_ref(int(tables[b, i]))
+                    activate_group([(b, rid) for b, rid, _, _ in grp],
+                                   lens, last)
+                if deferred:
+                    # head-of-queue, original order: they re-admit first
+                    for rid in reversed(deferred):
+                        sched.queue.push_front(rid)
+                    return
+
+        def ensure_chunk_coverage():
+            """Before a chunk, every live row's table must cover the full
+            ``chunk_steps`` of writes (fixed-shape scans advance positions
+            regardless of remaining budget; writes past ``max_seq`` are
+            sentinel-redirected device-side).  Pool exhaustion here is what
+            triggers eviction / preempt-youngest."""
+            for b in list(sched.table.live_slots()):
+                s = sched.table.slots[b]
+                if not s.occupied or s.eos_hit:
+                    continue   # preempted/retired meanwhile
+                want = blocks_for(
+                    min(int(pos[b]) + chunk_steps, self.cfg.max_seq), bs_blk
+                )
+                need = int(want - covered[b])
+                if need <= 0:
+                    continue
+                if not free_up(need, protect_slot=b):
+                    continue   # b itself was preempted
+                fresh = pool.alloc(int(slot_rid[b]), need)
+                tables[b, int(covered[b]): int(covered[b]) + need] = fresh
+                tables_dev["dirty"] = True
+                covered[b] += need
 
         eos_a, pad_a = jnp.int32(eos), jnp.int32(pad)
         while True:
-            admit_all()
+            admit_all_paged() if paged else admit_all()
             sched.check_invariants()
+            if paged:
+                ensure_chunk_coverage()
             if not sched.can_run_chunk():
+                if paged and sched.has_work():
+                    continue   # everything preempted: re-admit and retry
                 break
-            toks, tok_l, caches, pos_l, keys_l, eos_l = self._decode_scan(
-                chunk_steps, self.params, jnp.asarray(tok), caches,
-                jnp.asarray(pos), jnp.asarray(keys), jnp.asarray(eos_hit),
-                eos_a, pad_a,
-            )
+            if paged and tables_dev["dirty"]:
+                tables_dev["arr"] = jnp.asarray(tables)
+                tables_dev["dirty"] = False
+            if paged and self.cfg.paged_read == "shadow":
+                # gather once per chunk, dense-scan the view, write the
+                # chunk's span back — per-step decode cost equals dense
+                pos0 = jnp.asarray(pos)
+                view = self._gather_views(caches, tables_dev["arr"])
+                toks, tok_l, view, pos_l, keys_l, eos_l = self._decode_scan(
+                    chunk_steps, self.params, jnp.asarray(tok), view,
+                    pos0, jnp.asarray(keys), jnp.asarray(eos_hit),
+                    eos_a, pad_a, None,
+                )
+                caches = self._writeback_chunk(
+                    caches, view, tables_dev["arr"], pos0, chunk_steps
+                )
+            else:
+                toks, tok_l, caches, pos_l, keys_l, eos_l = self._decode_scan(
+                    chunk_steps, self.params, jnp.asarray(tok), caches,
+                    jnp.asarray(pos), jnp.asarray(keys), jnp.asarray(eos_hit),
+                    eos_a, pad_a, tables_dev["arr"] if paged else None,
+                )
             # one device->host transfer; np.array copies because the host
             # mirrors are written by admission/retirement below
             toks, tok, pos, keys, eos_hit = [
@@ -472,6 +774,8 @@ class Engine:
                 if finished:
                     finalize(rid)
                     sched.retire(b)
+                    if paged:
+                        release_slot_blocks(b)
                     eos_hit[b] = True
 
         sched.check_invariants()
@@ -483,6 +787,20 @@ class Engine:
             "useful_tokens": int(sum(budget_used(bufs[i], budgets[i], eos)
                                      for i in range(n))),
         }
+        if paged:
+            # after drain every block is free or prefix-cache-held (rc 1):
+            # leaked blocks / unbalanced refcounts fail loudly here, and the
+            # equivalence battery asserts the exported counters besides
+            pool.check_balanced(n_live_requests=0)
+            self.last_serve_stats["paged"] = {
+                **pool.stats(),
+                **(prefix.stats() if prefix is not None else
+                   {"prefix_caching": False}),
+                "prefill_tokens_computed": prefill_tok["computed"],
+                "prefill_tokens_saved": prefill_tok["saved"],
+            }
+            self._last_pool = pool          # test introspection handles
+            self._last_prefix = prefix
         return outputs  # type: ignore[return-value]
 
 

@@ -44,6 +44,9 @@ class Slot:
     remaining: int = 0     # decode tokens still owed (first token is paid
                            # for by prefill, so this starts at max_new - 1)
     eos_hit: bool = True   # latched: empty, finished, or EOS'd
+    useful_steps: int = 0  # token-steps credited to THIS occupancy — rolled
+                           # back if the request is preempted (its emitted
+                           # tokens are discarded and re-generated)
 
     @property
     def occupied(self) -> bool:
@@ -94,6 +97,12 @@ class AdmissionQueue:
     def push(self, request_id: int) -> None:
         self._q.append(request_id)
 
+    def push_front(self, request_id: int) -> None:
+        """Head-of-queue insert: a preempted request re-admits before any
+        newer arrivals, so preemption can't starve it (FIFO fairness up to
+        the preemption itself)."""
+        self._q.appendleft(request_id)
+
     def pop(self) -> int:
         return self._q.popleft()
 
@@ -128,6 +137,10 @@ class ContinuousScheduler:
         self.useful_token_steps = 0
         self.total_token_steps = 0
         self.chunks_run = 0
+        # admission recency, for the paged engine's preempt-youngest policy
+        self._admit_seq = 0
+        self._slot_admit_seq = [0] * n_slots
+        self.n_preemptions = 0
 
     # ------------------------------ admission ------------------------------
 
@@ -151,11 +164,44 @@ class ContinuousScheduler:
         entering a chunk."""
         done = eos_hit or remaining == 0
         self.table.admit(slot, request_id, pos, remaining, eos_hit=done)
+        self._admit_seq += 1
+        self._slot_admit_seq[slot] = self._admit_seq
         return done
 
     def retire(self, slot: int) -> int:
         rid = self.table.retire(slot)
         self.served.append(rid)
+        return rid
+
+    # ------------------------------ preemption -----------------------------
+
+    def youngest_live_slot(self) -> int | None:
+        """The live slot admitted most recently — the paged engine's
+        preemption victim on pool exhaustion (preempting the youngest
+        wastes the least completed work and lets older requests drain,
+        guaranteeing progress)."""
+        live = self.table.live_slots()
+        if not live:
+            return None
+        return max(live, key=lambda b: self._slot_admit_seq[b])
+
+    def preempt(self, slot: int) -> int:
+        """Evict a live request from its slot and push it back to the HEAD
+        of the admission queue.  Its re-admission restarts generation from
+        scratch (preemption-with-recompute): generation is a deterministic
+        function of (request id, seed, prompt), so the regenerated stream —
+        and therefore the final output — is bit-identical to the
+        never-preempted run.  The caller discards the request's partial
+        output buffer and frees its cache blocks."""
+        s = self.table.slots[slot]
+        assert s.occupied and not s.eos_hit, f"slot {slot} not preemptible"
+        # the discarded tokens get re-generated and re-counted on the
+        # re-run, so their token-steps become waste, not useful work —
+        # without this rollback any preempting run inflates utilization
+        self.useful_token_steps -= s.useful_steps
+        rid = self.table.retire(slot)
+        self.queue.push_front(rid)
+        self.n_preemptions += 1
         return rid
 
     # ------------------------------- chunks --------------------------------
@@ -195,6 +241,7 @@ class ContinuousScheduler:
             if eos_steps is not None:
                 useful = min(useful, int(eos_steps[b]) + 1)
             self.useful_token_steps += useful
+            s.useful_steps += useful
             finished = hit or s.remaining == 0
             out.append((b, s.request_id, n_keep, finished))
         return out
@@ -215,6 +262,7 @@ class ContinuousScheduler:
             "useful_token_steps": self.useful_token_steps,
             "total_token_steps": self.total_token_steps,
             "mean_slot_utilization": self.mean_slot_utilization(),
+            "n_preemptions": self.n_preemptions,
         }
 
     def check_invariants(self) -> None:

@@ -138,6 +138,165 @@ def test_property_schedule_invariance(order_seed, n_requests, slots,
         np.testing.assert_array_equal(expect, outs[i])
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (block pool + prefix cache + preemption) — same contract
+# ---------------------------------------------------------------------------
+
+# memoized per pool shape: a new Engine re-jits its programs, so the sweep
+# reuses engines across examples (params shared with the dense singleton)
+_PAGED_ENGINES: dict = {}
+
+
+def get_paged_engine(block_size: int, pool_blocks: int) -> Engine:
+    key = (block_size, pool_blocks)
+    if key not in _PAGED_ENGINES:
+        base = get_engine()
+        _PAGED_ENGINES[key] = Engine(
+            base.params, base.model,
+            ServeConfig(max_seq=48, max_new_tokens=MAX_NEW, paged=True,
+                        block_size=block_size, pool_blocks=pool_blocks),
+        )
+    return _PAGED_ENGINES[key]
+
+
+def _assert_pool_drained(eng: Engine) -> None:
+    """Zero leaked blocks + balanced refcounts after drain: every in-use
+    block is prefix-cache-held at refcount exactly 1, and flushing the
+    prefix cache returns the pool to fully free."""
+    pool = eng._last_pool
+    pool.check_balanced(n_live_requests=0)
+    st = eng.last_serve_stats["paged"]
+    assert st["blocks_in_use"] == st["blocks_cache_held"]
+    if eng._last_prefix is not None:
+        eng._last_prefix.flush(pool)
+    assert pool.free_count() == pool.usable and pool.in_use() == 0
+    pool.check_balanced(n_live_requests=0)
+
+
+@hypothesis.settings(max_examples=5, deadline=None)
+@hypothesis.given(
+    order_seed=st.integers(0, 10_000),
+    n_requests=st.integers(1, 5),
+    slots=st.integers(1, 3),
+    chunk_steps=st.integers(1, 3),
+    block_size=st.sampled_from([4, 6, 8]),
+    pool_slack=st.integers(0, 3),           # blocks beyond the 1-request
+                                            # minimum: small -> preemption
+    shared_prefix=st.booleans(),
+    eos_pos=st.integers(-1, MAX_NEW - 1),
+    budget_seed=st.integers(0, 10_000),
+)
+def test_property_paged_schedule_invariance(order_seed, n_requests, slots,
+                                            chunk_steps, block_size,
+                                            pool_slack, shared_prefix,
+                                            eos_pos, budget_seed):
+    """The tentpole acceptance sweep: random request sets (optionally
+    sharing a long prompt prefix, so the prefix cache actually hits) x
+    random block sizes x pools barely larger than a single request's
+    worst-case footprint (so admission stalls and preempt-youngest fire) —
+    every output stays bit-identical to the isolated dense generation, and
+    the block pool drains with zero leaks and balanced refcounts."""
+    from repro.serve.kv_pool import worst_case_blocks
+
+    eng_d = get_engine()
+    rs = np.random.RandomState(order_seed)
+    reqs = [POOL[rs.randint(len(POOL))] for _ in range(n_requests)]
+    if shared_prefix:
+        # common 9-token prefix: at block_size 4 that is 2 shareable full
+        # blocks; lengths stay <= 23 + MAX_NEW < 48
+        common = RS.randint(0, 100, 9).astype(np.int32)
+        reqs = [np.concatenate([common, r]) for r in reqs]
+    bs_ = np.random.RandomState(budget_seed)
+    budgets = [int(bs_.randint(1, MAX_NEW + 1)) for _ in range(n_requests)]
+    if eos_pos >= 0:
+        probe = solo(eng_d, reqs[0], MAX_NEW, -1)
+        eos = int(probe[min(eos_pos, budgets[0] - 1)])
+    else:
+        eos = -1
+    wmax = max(
+        worst_case_blocks(r.shape[0], m, chunk_steps, block_size, 48)
+        for r, m in zip(reqs, budgets)
+    )
+    eng_p = get_paged_engine(block_size, wmax + pool_slack + 1)
+    old_d, old_p = eng_d.cfg.eos_id, eng_p.cfg.eos_id
+    eng_d.cfg.eos_id = eng_p.cfg.eos_id = eos
+    try:
+        outs = eng_p.serve_continuous(reqs, slots=slots,
+                                      chunk_steps=chunk_steps, seed=0,
+                                      max_new=budgets)
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(
+                solo(eng_d, r, budgets[i], eos), outs[i]
+            )
+    finally:
+        eng_d.cfg.eos_id, eng_p.cfg.eos_id = old_d, old_p
+    assert eng_p.last_serve_stats["n_served"] == n_requests
+    _assert_pool_drained(eng_p)
+
+
+def test_paged_forced_preemption_still_bit_identical(engine):
+    """A pool barely above one request's footprint with several slots live
+    MUST preempt — and preemption-with-recompute regenerates the same
+    tokens, so outputs stay bit-equal to solo generation."""
+    eng_p = get_paged_engine(4, 8)            # 7 usable blocks
+    reqs = [POOL[3], POOL[4], POOL[5], POOL[0]]
+    outs = eng_p.serve_continuous(reqs, slots=3, chunk_steps=2, seed=0)
+    assert eng_p.last_serve_stats["n_preemptions"] > 0
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(solo(engine, r, MAX_NEW, -1), outs[i])
+    _assert_pool_drained(eng_p)
+
+
+def test_paged_prefix_hits_skip_prefill_work(engine):
+    """Identical prompts served paged: later admissions reuse the first
+    request's blocks (prefill_tokens_saved > 0) and still match solo."""
+    eng_p = get_paged_engine(4, 40)
+    reqs = [POOL[5]] * 4
+    outs = eng_p.serve_continuous(reqs, slots=2, chunk_steps=2, seed=0)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(solo(engine, r, MAX_NEW, -1), outs[i])
+    st = eng_p.last_serve_stats["paged"]
+    assert st["prefix_hit_blocks"] > 0 and st["prefill_tokens_saved"] > 0
+    _assert_pool_drained(eng_p)
+
+
+def test_paged_step_read_path_bit_identical(engine):
+    """paged_read='step' (per-token block-table reads — the shape a fused
+    TPU paged-attention kernel executes) matches solo generation and the
+    default shadow path, including under forced preemption; unknown
+    paged_read values are rejected up front."""
+    eng_s = Engine(engine.params, engine.model,
+                   ServeConfig(max_seq=48, max_new_tokens=MAX_NEW, paged=True,
+                               block_size=4, pool_blocks=8,
+                               paged_read="step"))
+    reqs = [POOL[3], POOL[4], POOL[5], POOL[0]]
+    outs = eng_s.serve_continuous(reqs, slots=3, chunk_steps=2, seed=0)
+    assert eng_s.last_serve_stats["n_preemptions"] > 0
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(solo(engine, r, MAX_NEW, -1), outs[i])
+    _assert_pool_drained(eng_s)
+    eng_bad = Engine(engine.params, engine.model,
+                     ServeConfig(max_seq=48, max_new_tokens=MAX_NEW,
+                                 paged=True, block_size=4,
+                                 paged_read="Shadow"))
+    with pytest.raises(ValueError, match="paged_read"):
+        eng_bad.serve_continuous([POOL[0]], slots=1, chunk_steps=2)
+
+
+def test_scheduler_preempt_requeues_at_head():
+    s = ContinuousScheduler(n_slots=2, request_ids=[0, 1, 2])
+    for slot, rid in s.admit_ready():
+        s.confirm_admit(slot, rid, pos=4, remaining=3, eos_hit=False)
+    assert s.youngest_live_slot() == 1        # rid 1 admitted last
+    assert s.preempt(1) == 1
+    assert s.n_preemptions == 1
+    # head-of-queue: rid 1 re-admits before rid 2
+    (slot, rid), = s.admit_ready()
+    assert rid == 1
+    s.confirm_admit(slot, rid, pos=4, remaining=3, eos_hit=False)
+    s.check_invariants()
+
+
 def test_admission_padding_clamped_to_max_seq(engine):
     """A prompt whose pad bucket would exceed max_seq still admits: the
     padded length clamps to max_seq (padding past L is causally invisible)

@@ -52,3 +52,20 @@ def test_cli_continuous_engine_smoke():
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "[serve:continuous]" in proc.stdout, proc.stdout
     assert "slot_utilization=" in proc.stdout, proc.stdout
+
+
+def test_cli_paged_engine_smoke():
+    proc = _run_cli("--engine", "continuous", "--chunk-steps", "2",
+                    "--paged", "--block-size", "4")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "[serve:paged]" in proc.stdout, proc.stdout
+    assert "blocks_watermark=" in proc.stdout, proc.stdout
+
+
+def test_cli_paged_requires_continuous():
+    args = build_parser().parse_args(
+        ["--arch", ARCH, "--paged", "--block-size", "4"])
+    assert args.paged and args.engine == "static"
+    proc = _run_cli("--paged")
+    assert proc.returncode == 2
+    assert "--paged requires --engine continuous" in proc.stderr
