@@ -4,13 +4,14 @@ Prints ``name,us_per_call,derived`` CSV (brief deliverable (d)) and writes
 ``BENCH_kan_paths.json`` (µs per KAN path + modeled HBM bytes + autotuned
 tile choices) so future PRs have a perf trajectory to compare against.
 
-``--smoke`` runs the kanpaths, serving, and prefix-cache suites at reduced
-shapes (sets ``$KAN_SAS_BENCH_SMOKE=1``) and *fails* unless the written
-JSONs carry the sparse-path rows (``BENCH_kan_paths.json``), the
-continuous-engine rows (``BENCH_serve.json``), and the paged-engine rows
-(``BENCH_prefix.json``) — the CI gates that keep the N:M sparse datapath,
-the continuous-batching engine, and the paged KV subsystem in the perf
-trajectory."""
+``--smoke`` runs the kanpaths, serving, prefix-cache, and mesh-sharding
+suites at reduced shapes (sets ``$KAN_SAS_BENCH_SMOKE=1``) and *fails*
+unless the written JSONs carry the sparse-path rows
+(``BENCH_kan_paths.json``), the continuous-engine rows
+(``BENCH_serve.json``), the paged-engine rows (``BENCH_prefix.json``), and
+both mesh columns (``BENCH_shard.json``) — the CI gates that keep the N:M
+sparse datapath, the continuous-batching engine, the paged KV subsystem,
+and mesh-native serving in the perf trajectory."""
 
 from __future__ import annotations
 
@@ -24,6 +25,7 @@ KAN_PATHS_JSON = os.path.join(os.path.dirname(__file__), "..",
 SERVE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 PREFIX_JSON = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_prefix.json")
+SHARD_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_shard.json")
 
 
 def _check_sparse_rows(rep: dict) -> list[str]:
@@ -85,6 +87,26 @@ def _check_prefix_rows(rep: dict) -> list[str]:
     return problems
 
 
+def _check_shard_rows(rep: dict) -> list[str]:
+    """The mesh rows every sharding report must carry (CI smoke gate):
+    without BOTH mesh columns the trajectory silently loses the
+    sharded-vs-single-device comparison."""
+    problems = []
+    meshes = rep.get("meshes", {})
+    for name in ("1x1", "2x4"):
+        if name not in meshes:
+            problems.append(f"meshes.{name} missing")
+            continue
+        for key in ("tokens_per_s", "params_bytes_per_device",
+                    "pool_bytes_per_device"):
+            if key not in meshes[name]:
+                problems.append(f"meshes.{name}.{key} missing")
+    for key in ("params_bytes_cut_per_device", "tokens_per_s_ratio"):
+        if key not in rep:
+            problems.append(f"{key} missing")
+    return problems
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -100,6 +122,7 @@ def main() -> None:
         roofline,
         sa_sweep,
         serve_bench,
+        shard_bench,
         workloads,
     )
 
@@ -113,11 +136,12 @@ def main() -> None:
         ("kanpaths", kan_paths),
         ("serve", serve_bench),
         ("prefix", prefix_bench),
+        ("shard", shard_bench),
         ("roofline", roofline),
     ]
     if smoke:
         suites = [("kanpaths", kan_paths), ("serve", serve_bench),
-                  ("prefix", prefix_bench)]
+                  ("prefix", prefix_bench), ("shard", shard_bench)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in suites:
@@ -131,6 +155,7 @@ def main() -> None:
         (kan_paths, KAN_PATHS_JSON, _check_sparse_rows, "SPARSE"),
         (serve_bench, SERVE_JSON, _check_serve_rows, "SERVE"),
         (prefix_bench, PREFIX_JSON, _check_prefix_rows, "PREFIX"),
+        (shard_bench, SHARD_JSON, _check_shard_rows, "SHARD"),
     ]
     for mod, json_path, checker, label in gates:
         rep = getattr(mod.run, "last_report", None)

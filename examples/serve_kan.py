@@ -13,7 +13,8 @@ through the prefill+decode engine.
 system-prompt-heavy workload (every request shares a long prefix, unique
 short suffixes): the prefix cache prefillls the shared blocks once and
 every later admission reuses them, so the demo prints how many prefill
-tokens the block pool saved (DESIGN.md §3b).
+tokens the block pool saved (DESIGN.md §3b).  ``--mesh DxM`` serves on a
+(data, model) host mesh with sharded params and KV (DESIGN.md §4).
 """
 
 import argparse
@@ -36,15 +37,29 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged-KV demo: one shared system prompt + unique "
                          "suffixes, exercising prefix-cache hits end to end")
+    ap.add_argument("--mesh", type=str, default=None, metavar="DxM",
+                    help="serve on a (data, model) host mesh, e.g. 1x2 "
+                         "(DESIGN.md §4); default: single device")
     args = ap.parse_args(argv)
     if args.shared_prefix and args.engine != "continuous":
         ap.error("--shared-prefix needs --engine continuous (paged KV)")
 
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_host_mesh, parse_mesh_shape
+
+        try:
+            mesh = make_host_mesh(parse_mesh_shape(args.mesh))
+        except ValueError as e:
+            ap.error(str(e))
+        print(f"mesh={dict(mesh.shape)} over {mesh.size} host devices "
+              f"(params + KV sharded; same outputs as single-device)")
     arch = configs.get_reduced("kanformer-100m")
     params = lm.init_params(jax.random.PRNGKey(0), arch.model)
     eng = Engine(params, arch.model,
                  ServeConfig(max_seq=96, max_new_tokens=16,
-                             paged=args.shared_prefix, block_size=8))
+                             paged=args.shared_prefix, block_size=8,
+                             mesh=mesh))
     rs = np.random.RandomState(0)
     if args.shared_prefix:
         # system-prompt-heavy workload: 32 shared tokens, 3-8 unique ones

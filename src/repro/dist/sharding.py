@@ -16,7 +16,12 @@ those names into ``PartitionSpec``s for a concrete mesh:
 * ``layers`` (the scan-over-repeats stacking axis) and anonymous ``None``
   axes are never sharded;
 * :func:`zero_spec` adds the data axes to an otherwise-replicated dimension
-  — ZeRO-style optimizer-state sharding on top of the parameter spec.
+  — ZeRO-style optimizer-state sharding on top of the parameter spec;
+* the paged KV pool's ``kv_blocks`` axis takes the data axes (pools carry
+  no ``batch``/``seq_cache``), while ``kv_heads`` still takes ``model`` —
+  each DP shard holds a slice of the physical block pool;
+* :class:`ShardingCtx` bundles a mesh with these rules so serving call
+  sites (``models/lm.py``, ``serve/engine.py``) stop re-deriving specs.
 
 Every rule degrades to replication when divisibility fails, so the same
 model code lowers on a 1-device host mesh and a 512-chip production mesh.
@@ -24,6 +29,7 @@ model code lowers on a 1-device host mesh and a 512-chip production mesh.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -43,8 +49,12 @@ MODEL_AXIS_PRIORITY = (
 DATA_MESH_AXES = ("pod", "data")
 
 # Logical axes that may absorb the data-parallel mesh axes, in order of
-# preference.
-BATCH_AXIS_PRIORITY = ("batch", "seq_cache")
+# preference.  ``kv_blocks`` is the paged KV pool's block axis (the paged
+# analogue of a dense cache's slots × sequence): pools have no ``batch``
+# or ``seq_cache`` dimension, so the block axis takes the data axes —
+# each DP shard holds a slice of the physical block pool while the
+# ``model`` axis splits ``kv_heads`` exactly as it does dense rows.
+BATCH_AXIS_PRIORITY = ("batch", "seq_cache", "kv_blocks")
 
 
 def _mesh_axis_size(mesh, name: str) -> int:
@@ -172,6 +182,93 @@ def tree_zero_shardings(axes_tree, abstract_tree, mesh):
         abstract_tree,
         is_leaf=_is_axes,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Mesh + spec derivation, bundled for the serving stack.
+
+    Inference entry points (``models/lm.py`` ``prefill``/``decode_step``/
+    the paged variants and ``serve/engine.py``) take an optional
+    ``ShardingCtx`` instead of re-deriving PartitionSpecs at every call
+    site: the ctx owns the mesh and turns logical axis names into
+    ``NamedSharding``s / ``with_sharding_constraint``s on demand.  Every
+    spec degrades to replication when divisibility fails, so a 1-device
+    mesh ctx is a behavioral no-op (bit-identical programs) and the same
+    serving code lowers on a laptop and a pod slice.
+    """
+
+    mesh: object                     # jax.sharding.Mesh
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.size)
+
+    # -- spec derivation ------------------------------------------------
+
+    def spec(self, names: tuple, shape: tuple[int, ...]) -> PartitionSpec:
+        return spec_for(Axes(tuple(names)), tuple(shape), self.mesh)
+
+    def named(self, names: tuple, shape: tuple[int, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, PartitionSpec())
+
+    def rows(self, batch: int) -> NamedSharding:
+        """Sharding for a leading-batch host array (tokens, positions)."""
+        return NamedSharding(self.mesh, batch_spec(self.mesh, batch))
+
+    # -- constraints (used inside jitted model code) --------------------
+
+    def constrain(self, x, names: tuple):
+        """Pin one traced array to its logical-axes spec."""
+        return jax.lax.with_sharding_constraint(x, self.named(names, x.shape))
+
+    def constrain_tree(self, tree, axes_tree):
+        """Pin a whole tree (caches, params) to its Axes tree's specs —
+        the guard that keeps KV updates from silently gathering."""
+        return jax.tree.map(
+            lambda ax, a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(self.mesh, spec_for(ax, a.shape, self.mesh))
+            ),
+            axes_tree,
+            tree,
+            is_leaf=_is_axes,
+        )
+
+    # -- model-level sharding trees (lazy lm import: no cycle) ----------
+
+    def param_shardings(self, model_cfg, dtype=jnp.float32):
+        from repro.models import lm
+
+        return tree_shardings(
+            lm.param_axes(model_cfg), lm.abstract_params(model_cfg, dtype),
+            self.mesh,
+        )
+
+    def place_params(self, model_cfg, params):
+        """device_put the parameter tree onto its derived shardings."""
+        return shard_tree(params, self.param_shardings(model_cfg))
+
+    def cache_shardings(self, model_cfg, batch: int, max_seq: int,
+                        dtype=jnp.bfloat16):
+        from repro.models import lm
+
+        return tree_shardings(
+            lm.cache_axes(model_cfg),
+            lm.abstract_caches(model_cfg, batch, max_seq, dtype),
+            self.mesh,
+        )
+
+    def paged_cache_shardings(self, model_cfg, n_blocks: int,
+                              block_size: int, dtype=jnp.bfloat16):
+        from repro.models import lm
+
+        abstract = jax.eval_shape(
+            lambda: lm.init_paged_caches(model_cfg, n_blocks, block_size, dtype)
+        )
+        return tree_shardings(lm.paged_cache_axes(model_cfg), abstract, self.mesh)
 
 
 def with_sharded_leaves(abstract_tree, sharding_tree):

@@ -20,7 +20,37 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever this host offers (CPU smoke/examples): 1 device -> 1x1."""
+def make_host_mesh(shape: tuple[int, int] | None = None):
+    """Host ``(data, model)`` mesh for CPU smoke/examples/serving.
+
+    Default (``shape=None``) keeps the historical behavior: every host
+    device lands on ``model`` (``(1, n)``).  That forced shape made data
+    parallelism impossible on a host mesh — pass ``shape=(data, model)``
+    to choose the split (e.g. ``(2, 4)`` on a forced-8-device host).  The
+    requested mesh may use a subset of the host's devices, but its size
+    must divide the device count (no stranded remainder)."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"))
+    if shape is None:
+        return jax.make_mesh((1, n), ("data", "model"))
+    d, m = int(shape[0]), int(shape[1])
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh shape must be positive, got {(d, m)}")
+    if d * m > n or n % (d * m):
+        raise ValueError(
+            f"host mesh {d}x{m} needs {d * m} devices but the host offers "
+            f"{n} ({'too few' if d * m > n else 'not divisible'}); force "
+            f"more with XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
+def parse_mesh_shape(s: str) -> tuple[int, int]:
+    """``"2x4"`` -> ``(2, 4)`` — the ``--mesh dxm`` CLI flag format."""
+    parts = s.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"--mesh expects DxM (e.g. 2x4), got {s!r}")
+    try:
+        d, m = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(f"--mesh expects integers DxM, got {s!r}") from None
+    return d, m

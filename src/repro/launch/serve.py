@@ -8,8 +8,10 @@ the production-mesh serve_step is exercised by the dry-run decode cells.
 continuous-batching loop (``Engine.serve_continuous``) and reports its slot
 utilization.  ``--paged`` (continuous only) switches the KV cache to the
 paged block pool with prefix caching and preemption (DESIGN.md §3b);
-``--block-size``/``--pool-blocks`` shape the pool.  Reduced (CPU-runnable)
-shapes are the default; ``--full`` selects the full production config.
+``--block-size``/``--pool-blocks`` shape the pool.  ``--mesh DxM`` serves
+on a (data, model) host mesh (DESIGN.md §4: params/KV sharded, outputs
+identical to the single-device engine).  Reduced (CPU-runnable) shapes are
+the default; ``--full`` selects the full production config.
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.launch.mesh import make_host_mesh, parse_mesh_shape
 from repro.models import lm
 from repro.serve.engine import Engine, ServeConfig
 
@@ -53,6 +56,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="paged: physical blocks incl. the sentinel "
                          "(default: dense-equivalent capacity)")
+    ap.add_argument("--mesh", type=str, default=None, metavar="DxM",
+                    help="serve on a (data, model) host mesh, e.g. 2x4 "
+                         "(requires that many host devices; force with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count). "
+                         "Default: single-device engine")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -76,12 +84,22 @@ def main(argv=None) -> int:
     max_seq = args.prompt_len + args.max_new + 8
     if args.paged:   # the paged pool addresses whole blocks
         max_seq = -(-max_seq // args.block_size) * args.block_size
+    mesh = None
+    if args.mesh is not None:
+        try:
+            mesh = make_host_mesh(parse_mesh_shape(args.mesh))
+        except ValueError as e:
+            print(f"[serve] {e}", file=sys.stderr)
+            return 2
+        print(f"[serve] mesh={dict(mesh.shape)} over {mesh.size} "
+              f"of {len(jax.devices())} host devices")
     eng = Engine(
         params, model,
         ServeConfig(max_seq=max_seq,
                     max_new_tokens=args.max_new, temperature=args.temperature,
                     eos_id=args.eos_id, paged=args.paged,
-                    block_size=args.block_size, pool_blocks=args.pool_blocks),
+                    block_size=args.block_size, pool_blocks=args.pool_blocks,
+                    mesh=mesh),
     )
     rs = np.random.RandomState(args.seed)
     reqs = [

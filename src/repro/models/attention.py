@@ -295,6 +295,37 @@ def _write_cache(cache: dict, name: str, val: jax.Array, slot: jax.Array, quant:
     return cache
 
 
+# Logical axes of each GQA cache-dict leaf, for with_sharding_constraint
+# under an optional ShardingCtx (``repro.dist.sharding``, duck-typed so the
+# models package stays import-free of the dist package): dense rows (and
+# gathered paged VIEWS) carry (batch, seq_cache, ...), pools carry
+# (kv_blocks, ...) — the same names ``blocks.block_cache_axes``/
+# ``block_paged_cache_axes`` export.  ``models/lm.py`` reuses these tables
+# for its pool/view constraints — ONE definition per layout.
+DENSE_CACHE_AXES = {
+    "k": ("batch", "seq_cache", "kv_heads", "head_dim"),
+    "v": ("batch", "seq_cache", "kv_heads", "head_dim"),
+    "k_scale": ("batch", "seq_cache", "kv_heads"),
+    "v_scale": ("batch", "seq_cache", "kv_heads"),
+}
+POOL_CACHE_AXES = {
+    "k": ("kv_blocks", None, "kv_heads", "head_dim"),
+    "v": ("kv_blocks", None, "kv_heads", "head_dim"),
+    "k_scale": ("kv_blocks", None, "kv_heads"),
+    "v_scale": ("kv_blocks", None, "kv_heads"),
+}
+
+
+def _constrain_cache(cache: dict, shard, paged: bool) -> dict:
+    """Pin freshly written cache leaves to their logical-axes shardings so
+    GSPMD keeps KV distributed through decode updates (no-op without a
+    ``shard`` ctx, and bit-identical under a 1-device mesh)."""
+    if shard is None:
+        return cache
+    table = POOL_CACHE_AXES if paged else DENSE_CACHE_AXES
+    return {k: shard.constrain(v, table[k]) for k, v in cache.items()}
+
+
 def _read_cache(cache: dict, name: str, quant: bool, dtype):
     if quant:
         return (
@@ -309,6 +340,7 @@ def attn_decode_step(
     x: jax.Array,                   # (B, 1, d_model)
     cache: dict,                    # {"k","v"[, "k_scale","v_scale"]}
     pos: jax.Array,                 # (B,) current absolute position
+    shard=None,                     # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, dict]:
     """One-token decode against a pre-filled KV cache.
 
@@ -317,7 +349,9 @@ def attn_decode_step(
     is "slot written", which is within-window by construction.
 
     ``pos`` may be scalar (synchronized decode — collective-free cache
-    writes) or per-batch ``(B,)`` (ragged/continuous batching).
+    writes) or per-batch ``(B,)`` (ragged/continuous batching).  With a
+    ``shard`` ctx the updated cache leaves are constraint-pinned to their
+    logical-axes shardings (kv_heads on ``model``, batch on ``data``).
     """
     B = x.shape[0]
     S = cache["k"].shape[1]
@@ -327,6 +361,7 @@ def attn_decode_step(
     cache = dict(cache)
     cache = _write_cache(cache, "k", k, slot, cfg.kv_quant)
     cache = _write_cache(cache, "v", v, slot, cfg.kv_quant)
+    cache = _constrain_cache(cache, shard, paged=False)
     y = _cache_attend(params, cfg, x, cache, q, pos_b)
     return y, cache
 
@@ -513,6 +548,7 @@ def attn_decode_step_paged(
     cache: dict,                    # POOL leaves (n_blocks, bs, ...)
     table: jax.Array,               # (B, n_logical) int32 block table
     pos: jax.Array,                 # (B,) absolute positions
+    shard=None,                     # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, dict]:
     """One-token decode against the paged pool: identical QKV math, writes
     routed through the block table, then :func:`_cache_attend` on the
@@ -527,6 +563,7 @@ def attn_decode_step_paged(
     cache = dict(cache)
     cache = _paged_write_token(cache, "k", k, table, pos_b, cfg.kv_quant)
     cache = _paged_write_token(cache, "v", v, table, pos_b, cfg.kv_quant)
+    cache = _constrain_cache(cache, shard, paged=True)
     y = _cache_attend(params, cfg, x, paged_view(cache, table), q, pos_b)
     return y, cache
 
@@ -544,6 +581,7 @@ def attn_prefill_paged(
     view_blocks: int | None = None, # static: table columns the attention
                                     # view needs (covers start + T); None =
                                     # all (the full max_seq view)
+    shard=None,                     # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, dict]:
     """Suffix prefill into pool blocks: the prefix-cache hit path computes
     only positions ``start..len-1`` (a prefix hit makes ``start > 0``).
@@ -567,6 +605,7 @@ def attn_prefill_paged(
     cache = dict(cache)
     cache = paged_write_span(cache, "k", k, table, start, lengths, cfg.kv_quant)
     cache = paged_write_span(cache, "v", v, table, start, lengths, cfg.kv_quant)
+    cache = _constrain_cache(cache, shard, paged=True)
     # The view only needs the causally reachable range (<= start + T): any
     # chunk past the last query position is an exact online-softmax no-op,
     # so truncating to a static block count changes no bits but cuts the

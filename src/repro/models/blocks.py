@@ -222,8 +222,13 @@ def block_prefill(
     positions: jax.Array | None = None,
     max_seq: int,
     chunk: int = 1024,
+    shard=None,                    # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, dict]:
-    """Forward + decode-cache production (KV padded to ``max_seq``)."""
+    """Forward + decode-cache production (KV padded to ``max_seq``).
+
+    With ``shard`` the produced cache leaves are constraint-pinned to the
+    shardings their logical axes derive (``block_cache_axes``), so a jitted
+    sharded prefill hands decode a distributed cache, not a gathered one."""
     B, T, _ = x.shape
     h = L.rmsnorm(params["ln1"], x)
     if blk.kind in ("attn_mlp", "attn_moe", "attn_kan"):
@@ -269,6 +274,8 @@ def block_prefill(
             # inference path, batch-regime aware: fused Pallas kernel on TPU
             # at prefill row counts, sparse at decode, compact elsewhere
             x = x + _kan_ffn(params["kan"], h2, blk.kan_grid, method="auto")
+        if shard is not None:
+            cache = shard.constrain_tree(cache, block_cache_axes(blk))
         return x, cache
     if blk.kind == "mamba2":
         y, st = S.mamba2_forward(params["mamba"], blk.mamba, h, return_state=True)
@@ -278,6 +285,8 @@ def block_prefill(
         y, st = X.slstm_forward(params["slstm"], blk.xlstm, h, return_state=True)
     else:
         raise ValueError(blk.kind)
+    if shard is not None:
+        st = shard.constrain_tree(st, block_cache_axes(blk))
     return x + y, st
 
 
@@ -293,6 +302,7 @@ def block_prefill_paged(
     start: jax.Array,              # scalar: first uncached position
     chunk: int = 1024,
     view_blocks: int | None = None,
+    shard=None,                    # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, dict]:
     """Suffix prefill writing K/V straight into pool blocks — the paged
     counterpart of :func:`block_prefill` (which pads a private cache row to
@@ -303,7 +313,7 @@ def block_prefill_paged(
     h = L.rmsnorm(params["ln1"], x)
     y, cache = A.attn_prefill_paged(
         params["attn"], blk.attn, h, positions, cache, table, lengths, start,
-        chunk=chunk, view_blocks=view_blocks,
+        chunk=chunk, view_blocks=view_blocks, shard=shard,
     )
     x = x + y
     h2 = L.rmsnorm(params["ln2"], x)
@@ -382,6 +392,7 @@ def block_decode_step(
     cache: dict,
     pos: jax.Array,             # (B,)
     table: jax.Array | None = None,   # (B, n_logical): paged block table
+    shard=None,                 # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, dict]:
     h = L.rmsnorm(params["ln1"], x)
     if table is not None and not block_supports_paging(blk):
@@ -390,13 +401,17 @@ def block_decode_step(
         c = blk.attn
         if table is not None:
             y, cache = A.attn_decode_step_paged(
-                params["attn"], c, h, cache, table, pos
+                params["attn"], c, h, cache, table, pos, shard=shard
             )
         elif c.kv_lora_rank is not None:
             y, ckv = A.mla_decode_step(params["attn"], c, h, cache["ckv"], pos)
             cache = {"ckv": ckv}
+            if shard is not None:
+                cache = shard.constrain_tree(cache, block_cache_axes(blk))
         else:
-            y, cache = A.attn_decode_step(params["attn"], c, h, cache, pos)
+            y, cache = A.attn_decode_step(
+                params["attn"], c, h, cache, pos, shard=shard
+            )
         x = x + y
         h2 = L.rmsnorm(params["ln2"], x)
         if blk.kind == "attn_mlp":
@@ -417,4 +432,6 @@ def block_decode_step(
         y, cache = X.slstm_decode_step(params["slstm"], blk.xlstm, h, cache)
     else:
         raise ValueError(blk.kind)
+    if shard is not None:
+        cache = shard.constrain_tree(cache, block_cache_axes(blk))
     return x + y, cache

@@ -19,6 +19,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.models import attention as A
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models.blocks import BlockCfg
@@ -116,10 +117,18 @@ def _apply_block_by_ref(params_blk, blk: BlockCfg, shared_params, x, positions, 
 
 
 def forward(
-    params: dict, cfg: ModelConfig, inputs: dict, compute_dtype=jnp.bfloat16
+    params: dict, cfg: ModelConfig, inputs: dict, compute_dtype=jnp.bfloat16,
+    shard=None,
 ) -> tuple[jax.Array, dict]:
-    """-> (logits (B, T, vocab) fp32, aux losses)."""
+    """-> (logits (B, T, vocab) fp32, aux losses).
+
+    ``shard`` (optional ``repro.dist.sharding.ShardingCtx``): pins the
+    activations' batch axis to the data mesh axes; parameters are expected
+    to arrive committed to their own shardings (``ShardingCtx.place_params``).
+    """
     h = _embed_inputs(params, cfg, inputs, compute_dtype)
+    if shard is not None:
+        h = shard.constrain(h, ("batch", None, "embed"))
     T = h.shape[1]
     positions = jnp.arange(T)[None, :]
     shared = params.get("shared", [])
@@ -171,6 +180,8 @@ def forward(
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits / c)
+    if shard is not None:
+        logits = shard.constrain(logits, ("batch", None, "vocab"))
     return logits, aux_total
 
 
@@ -305,25 +316,33 @@ def paged_cache_axes(cfg: ModelConfig) -> dict:
     return axes
 
 
+def _leaf_names(table: dict, key: str, stacked: bool) -> tuple:
+    """Logical axes of one pool/view leaf: attention's per-layout tables
+    (``DENSE_CACHE_AXES`` for gathered views, ``POOL_CACHE_AXES`` for
+    pools — one definition per layout), plus the stacked unit caches'
+    leading 'layers' axis."""
+    return (("layers",) if stacked else ()) + table[key]
+
+
 def _map_paged_leaves(caches: dict, fn) -> dict:
-    """Apply ``fn(leaf, stacked)`` over a paged-cache tree: unit pools carry
-    a leading layers axis (``stacked=True``), prologue/epilogue don't."""
+    """Apply ``fn(key, leaf, stacked)`` over a paged-cache tree: unit pools
+    carry a leading layers axis (``stacked=True``), prologue/epilogue don't."""
     out: dict = {}
     if "prologue" in caches:
         out["prologue"] = [
-            {k: fn(a, False) for k, a in c.items()} for c in caches["prologue"]
+            {k: fn(k, a, False) for k, a in c.items()} for c in caches["prologue"]
         ]
     out["unit"] = [
-        {k: fn(a, True) for k, a in c.items()} for c in caches["unit"]
+        {k: fn(k, a, True) for k, a in c.items()} for c in caches["unit"]
     ]
     if "epilogue" in caches:
         out["epilogue"] = [
-            {k: fn(a, False) for k, a in c.items()} for c in caches["epilogue"]
+            {k: fn(k, a, False) for k, a in c.items()} for c in caches["epilogue"]
         ]
     return out
 
 
-def paged_views(caches: dict, table: jax.Array) -> dict:
+def paged_views(caches: dict, table: jax.Array, shard=None) -> dict:
     """Gather the logical dense view of every pool leaf: the result tree is
     shaped exactly like :func:`init_caches` (batch = table rows, seq =
     n_logical·block_size), so the UNCHANGED dense decode program runs on it.
@@ -333,19 +352,26 @@ def paged_views(caches: dict, table: jax.Array) -> dict:
     span back with :func:`writeback_paged_chunk` — amortizing the gather
     over ``chunk_steps`` instead of paying it every token.  The transient
     view costs ``slots x max_seq`` per layer (the dense *decode-batch*
-    footprint; the pool remains the only persistent KV store)."""
+    footprint; the pool remains the only persistent KV store).  With
+    ``shard`` the gathered view is constraint-pinned to the dense cache
+    shardings (batch on ``data``, kv_heads on ``model``)."""
     from repro.kernels.paged_gather import gather_blocks
 
-    def leaf(pool, stacked):
+    def leaf(key, pool, stacked):
         if stacked:
-            return jax.vmap(lambda p: gather_blocks(p, table))(pool)
-        return gather_blocks(pool, table)
+            v = jax.vmap(lambda p: gather_blocks(p, table))(pool)
+        else:
+            v = gather_blocks(pool, table)
+        if shard is not None:
+            v = shard.constrain(v, _leaf_names(A.DENSE_CACHE_AXES, key, stacked))
+        return v
 
     return _map_paged_leaves(caches, leaf)
 
 
 def writeback_paged_chunk(
-    caches: dict, view: dict, table: jax.Array, pos0: jax.Array, steps: int
+    caches: dict, view: dict, table: jax.Array, pos0: jax.Array, steps: int,
+    shard=None,
 ) -> dict:
     """Scatter a finished chunk's writes from the dense shadow ``view``
     back into the pools.
@@ -359,9 +385,7 @@ def writeback_paged_chunk(
 
     from repro.models.attention import paged_route
 
-    def leaf(pool, v, stacked):
-        if stacked:
-            return jax.vmap(lambda p, vv: leaf(p, vv, False))(pool, v)
+    def write(pool, v):
         bs = pool.shape[1]
         B, S = v.shape[:2]
         positions = pos0[:, None] + jnp.arange(steps)[None, :]   # (B, steps)
@@ -372,15 +396,21 @@ def writeback_paged_chunk(
         phys, off = paged_route(table, positions, bs)
         return pool.at[phys, off].set(vals.astype(pool.dtype))
 
-    pooled = _map_paged_leaves(caches, lambda a, s: (a, s))
+    def leaf(key, pool, v, stacked):
+        out = jax.vmap(write)(pool, v) if stacked else write(pool, v)
+        if shard is not None:
+            out = shard.constrain(out, _leaf_names(A.POOL_CACHE_AXES, key, stacked))
+        return out
+
+    pooled = _map_paged_leaves(caches, lambda k, a, s: (k, a, s))
     return jax.tree.map(
-        lambda ps, v: leaf(ps[0], v, ps[1]),
+        lambda ps, v: leaf(ps[0], ps[1], v, ps[2]),
         pooled, view,
         is_leaf=lambda x: isinstance(x, tuple),
     )
 
 
-def copy_paged_block(caches: dict, src, dst) -> dict:
+def copy_paged_block(caches: dict, src, dst, shard=None) -> dict:
     """Device-side copy of physical block ``src`` -> ``dst`` in every pool
     leaf — the data half of copy-on-write (``kv_pool.BlockPool.copy_on_write``
     rebinds the table; this copies the KV payload).  ``src``/``dst`` may be
@@ -388,12 +418,15 @@ def copy_paged_block(caches: dict, src, dst) -> dict:
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
 
-    def copy_leaf(pool, stacked: bool):
+    def copy_leaf(key, pool, stacked: bool):
         # unit pools carry a leading layers axis, so their block axis is 1;
         # prologue/epilogue pools index blocks at axis 0
         ax = 1 if stacked else 0
         blk = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=ax)
-        return jax.lax.dynamic_update_slice_in_dim(pool, blk, dst, axis=ax)
+        out = jax.lax.dynamic_update_slice_in_dim(pool, blk, dst, axis=ax)
+        if shard is not None:
+            out = shard.constrain(out, _leaf_names(A.POOL_CACHE_AXES, key, stacked))
+        return out
 
     return _map_paged_leaves(caches, copy_leaf)
 
@@ -404,10 +437,17 @@ def prefill(
     inputs: dict,
     max_seq: int,
     compute_dtype=jnp.bfloat16,
+    shard=None,
 ) -> tuple[jax.Array, dict]:
     """Inference prefill: full-sequence forward that also fills the decode
-    caches (the ``prefill_32k`` workload). Returns (logits, caches)."""
+    caches (the ``prefill_32k`` workload). Returns (logits, caches).
+
+    ``shard`` (optional ``ShardingCtx``) pins every produced cache leaf to
+    its logical-axes sharding (kv_heads on ``model``, batch/seq on the data
+    axes), so a sharded serve program hands decode a distributed cache."""
     h = _embed_inputs(params, cfg, inputs, compute_dtype)
+    if shard is not None:
+        h = shard.constrain(h, ("batch", None, "embed"))
     T = h.shape[1]
     positions = jnp.arange(T)[None, :]
     shared = params.get("shared", [])
@@ -418,7 +458,7 @@ def prefill(
         for p_blk, blk in zip(params["prologue"], cfg.prologue):
             h, c = B.block_prefill(
                 p_blk, blk, h, positions=positions, max_seq=max_seq,
-                chunk=cfg.attn_chunk,
+                chunk=cfg.attn_chunk, shard=shard,
             )
             pcs.append(c)
         caches["prologue"] = pcs
@@ -429,7 +469,7 @@ def prefill(
             p = shared[blk.shared_id] if blk.shared_id is not None else rep_params[i]
             h_carry, c = B.block_prefill(
                 p, blk, h_carry, positions=positions, max_seq=max_seq,
-                chunk=cfg.attn_chunk,
+                chunk=cfg.attn_chunk, shard=shard,
             )
             new_caches.append(c)
         return h_carry, new_caches
@@ -450,7 +490,7 @@ def prefill(
         for p_blk, blk in zip(params["epilogue"], cfg.epilogue):
             h, c = B.block_prefill(
                 p_blk, blk, h, positions=positions, max_seq=max_seq,
-                chunk=cfg.attn_chunk,
+                chunk=cfg.attn_chunk, shard=shard,
             )
             ecs.append(c)
         caches["epilogue"] = ecs
@@ -488,7 +528,8 @@ def abstract_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat
     return jax.eval_shape(lambda: init_caches(cfg, batch, max_seq, dtype))
 
 
-def insert_cache_slot(cfg: ModelConfig, caches: dict, one: dict, slot) -> dict:
+def insert_cache_slot(cfg: ModelConfig, caches: dict, one: dict, slot,
+                      shard=None) -> dict:
     """Write a batch-1 cache tree into batch row ``slot`` of a live cache.
 
     ``one`` must mirror ``caches`` structurally with batch size 1 (both
@@ -503,9 +544,12 @@ def insert_cache_slot(cfg: ModelConfig, caches: dict, one: dict, slot) -> dict:
 
     def put(big, small, ax):
         b_axis = ax.names.index("batch")
-        return jax.lax.dynamic_update_slice_in_dim(
+        out = jax.lax.dynamic_update_slice_in_dim(
             big, small.astype(big.dtype), slot, axis=b_axis
         )
+        if shard is not None:
+            out = shard.constrain(out, ax.names)
+        return out
 
     return jax.tree.map(put, caches, one, axes)
 
@@ -519,6 +563,7 @@ def prefill_into_slot(
     caches: dict,
     max_seq: int,
     compute_dtype=jnp.bfloat16,
+    shard=None,
 ) -> tuple[jax.Array, dict]:
     """Prefill ONE request and splice its KV into slot ``slot`` of a live
     batch cache — the cache-insert primitive continuous batching needs to
@@ -538,7 +583,7 @@ def prefill_into_slot(
         params, cfg, tokens,
         jnp.reshape(jnp.asarray(length, jnp.int32), (1,)),
         jnp.reshape(jnp.asarray(slot, jnp.int32), (1,)),
-        caches, max_seq, compute_dtype,
+        caches, max_seq, compute_dtype, shard,
     )
     return last[0], caches
 
@@ -552,6 +597,7 @@ def prefill_into_slots(
     caches: dict,
     max_seq: int,
     compute_dtype=jnp.bfloat16,
+    shard=None,
 ) -> tuple[jax.Array, dict]:
     """Batched :func:`prefill_into_slot`: ONE prefill dispatch admits ``k``
     queued requests at once (k is static — jit callers retrace per
@@ -562,7 +608,9 @@ def prefill_into_slots(
     its batch-1 admission.  Returns ``(last_logits (k, vocab), caches)``.
     """
     k = tokens.shape[0]
-    logits, many = prefill(params, cfg, {"tokens": tokens}, max_seq, compute_dtype)
+    logits, many = prefill(
+        params, cfg, {"tokens": tokens}, max_seq, compute_dtype, shard
+    )
     last = jnp.take_along_axis(
         logits, (lengths - 1)[:, None, None], axis=1
     )[:, 0]
@@ -574,7 +622,7 @@ def prefill_into_slots(
             ),
             many, axes,
         )
-        caches = insert_cache_slot(cfg, caches, one, slots[i])
+        caches = insert_cache_slot(cfg, caches, one, slots[i], shard)
     return last, caches
 
 
@@ -590,6 +638,7 @@ def prefill_into_pages(
     view_blocks: int | None = None,   # STATIC attention-view truncation:
                                       # table columns covering start + Ts
                                       # (bit-identical — see attn_prefill_paged)
+    shard=None,
 ) -> tuple[jax.Array, dict]:
     """Paged admission prefill: compute ONLY the uncached suffix (positions
     ``start .. len-1``; a prefix-cache hit makes ``start > 0``) and scatter
@@ -620,7 +669,7 @@ def prefill_into_pages(
         return B.block_prefill_paged(
             p, blk, h, positions=positions, cache=cache, table=tables,
             lengths=lengths, start=start, chunk=cfg.attn_chunk,
-            view_blocks=view_blocks,
+            view_blocks=view_blocks, shard=shard,
         )
 
     if cfg.prologue:
@@ -676,13 +725,15 @@ def decode_step(
     pos: jax.Array,              # (B,)
     compute_dtype=jnp.bfloat16,
     table: jax.Array | None = None,   # (B, n_logical): paged block tables
+    shard=None,
 ) -> tuple[jax.Array, dict]:
     """One decode step for the whole model -> (logits (B, vocab), caches).
 
     With ``table`` set, ``caches`` holds paged pools
     (:func:`init_paged_caches`) and every block reads/writes through the
     block table (DESIGN.md §3b); the same physical block id addresses every
-    layer's pool."""
+    layer's pool.  ``shard`` (optional ``ShardingCtx``) keeps the updated
+    cache leaves pinned to their mesh shardings step over step."""
     d = cfg.d_model
     if cfg.input_kind == "tokens" or cfg.input_kind == "mixed":
         h = L.embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(d)
@@ -696,7 +747,7 @@ def decode_step(
     if cfg.prologue:
         ncs = []
         for p_blk, blk, c in zip(params["prologue"], cfg.prologue, caches["prologue"]):
-            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos, table)
+            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos, table, shard)
             ncs.append(c2)
         new_caches["prologue"] = ncs
 
@@ -706,7 +757,9 @@ def decode_step(
         new_rep = []
         for i, blk in enumerate(cfg.unit):
             p = shared[blk.shared_id] if blk.shared_id is not None else rep_params[i]
-            h_c, c2 = B.block_decode_step(p, blk, h_c, rep_caches[i], pos, table)
+            h_c, c2 = B.block_decode_step(
+                p, blk, h_c, rep_caches[i], pos, table, shard
+            )
             new_rep.append(c2)
         return h_c, new_rep
 
@@ -725,7 +778,7 @@ def decode_step(
     if cfg.epilogue:
         ncs = []
         for p_blk, blk, c in zip(params["epilogue"], cfg.epilogue, caches["epilogue"]):
-            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos, table)
+            h, c2 = B.block_decode_step(p_blk, blk, h, c, pos, table, shard)
             ncs.append(c2)
         new_caches["epilogue"] = ncs
 

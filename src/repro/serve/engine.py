@@ -48,6 +48,17 @@ still attend stale pad slots once a row's position wraps the window; the
 KAN serving configs use full attention, where the invariance is exact.
 SSM/LSTM block states are sequential and not pad-invariant under any
 padding scheme; equal-length buckets avoid padding entirely.
+
+Mesh-native serving (``ServeConfig.mesh``, DESIGN.md §4): the engine
+places params and KV (dense rows or the paged block pool) on
+``NamedSharding``s derived from their logical axes and threads a
+``ShardingCtx`` through every jitted program, so decode chunks, slot
+insertion, paged gather/writeback, and prefix-cache block copies stay
+distributed across devices.  Host bookkeeping (scheduler, BlockPool,
+PrefixCache) never sees device counts.  On one device the mesh path is
+bit-identical to ``mesh=None``; across devices token outputs still match
+(greedy and sampled) — only logits can differ in the last ulp, because
+partitioned contractions reorder fp32 partial sums.
 """
 
 from __future__ import annotations
@@ -95,11 +106,21 @@ class ServeConfig:
     # every token — the shape a fused TPU paged-attention kernel runs, and
     # the path with no transient view.  Both are bit-identical (tested).
     paged_read: str = "shadow"
+    # Mesh-native serving (DESIGN.md §4): a jax.sharding.Mesh with
+    # ("data", "model") axes (launch/mesh.py).  Parameters, dense cache
+    # rows, and the paged block pool are placed on NamedShardings derived
+    # from their logical axes (dist/sharding.py: kv_heads on "model",
+    # slots/blocks on "data"), and every jitted serve program threads a
+    # ShardingCtx so cache updates never silently gather to one device.
+    # None (default) keeps the single-device engine — byte-for-byte the
+    # pre-mesh behavior; a 1-device mesh compiles the same math and is
+    # bit-identical to it.  All host-side bookkeeping (scheduler,
+    # BlockPool, PrefixCache) is device-count-agnostic.
+    mesh: object | None = None
 
 
 class Engine:
     def __init__(self, params, model_cfg, serve_cfg: ServeConfig):
-        self.params = params
         self.model = model_cfg
         self.cfg = serve_cfg
         self._dt = jnp.float32 if serve_cfg.compute_dtype == "float32" else jnp.bfloat16
@@ -107,14 +128,47 @@ class Engine:
         self._last_pool = None      # paged-mode introspection (tests/bench)
         self._last_prefix = None
 
-        self._prefill = jax.jit(
+        # Mesh-native serving (ServeConfig.mesh): derive the parameter
+        # shardings once, commit the params to them, and thread a
+        # ShardingCtx through every jitted program below.  shard=None keeps
+        # the single-device engine byte-identical to the pre-mesh code.
+        if serve_cfg.mesh is not None:
+            from repro.dist.sharding import ShardingCtx, shard_tree
+
+            self.shard = ShardingCtx(serve_cfg.mesh)
+            self._pshard = self.shard.param_shardings(model_cfg)
+            params = shard_tree(params, self._pshard)
+        else:
+            self.shard = None
+            self._pshard = None
+        self.params = params
+        self._cache_init_progs: dict = {}   # (kind, *shape) -> jitted init
+        shard = self.shard
+
+        def _jit(fn, *, param_argnum=None, **kw):
+            """jit that pins the params argument to its sharding tree when a
+            mesh is configured (in_shardings; other args stay inferred-from-
+            commitment: None leaves = UNSPECIFIED).  Compiling the entry
+            points with explicit in_shardings is what guarantees admission
+            prefill never silently gathers the params to one device."""
+            if shard is not None and param_argnum is not None:
+                n_args = kw.pop("n_args")
+                in_sh = [None] * n_args
+                in_sh[param_argnum] = self._pshard
+                kw["in_shardings"] = tuple(in_sh)
+            else:
+                kw.pop("n_args", None)
+            return jax.jit(fn, **kw)
+
+        self._prefill = _jit(
             lambda p, inputs: lm.prefill(
-                p, self.model, inputs, self.cfg.max_seq, self._dt
-            )
+                p, self.model, inputs, self.cfg.max_seq, self._dt, shard
+            ),
+            param_argnum=0, n_args=2,
         )
         self._decode = jax.jit(
             lambda p, tok, caches, pos: lm.decode_step(
-                p, self.model, tok, caches, pos, self._dt
+                p, self.model, tok, caches, pos, self._dt, None, shard
             ),
             donate_argnums=(2,),   # caches update in place
         )
@@ -128,11 +182,12 @@ class Engine:
         # (retraces once per (k, padded prompt length) group shape — slots
         # free in bursts at chunk boundaries, so k-batching amortizes the
         # prefill dispatch overhead that dominates one-at-a-time refills)
-        self._prefill_insert = jax.jit(
+        self._prefill_insert = _jit(
             lambda p, toks, lengths, slots, caches: lm.prefill_into_slots(
                 p, self.model, toks, lengths, slots, caches,
-                self.cfg.max_seq, self._dt,
+                self.cfg.max_seq, self._dt, shard,
             ),
+            param_argnum=0, n_args=5,
             donate_argnums=(4,),
         )
         # paged admission: suffix prefill scattered straight into pool
@@ -144,7 +199,7 @@ class Engine:
             lambda p, toks, lengths, tables, caches, start, view_blocks:
                 lm.prefill_into_pages(
                     p, self.model, toks, lengths, tables, caches, start,
-                    self._dt, view_blocks,
+                    self._dt, view_blocks, shard,
                 ),
             donate_argnums=(4,), static_argnums=(6,),
         )
@@ -152,12 +207,60 @@ class Engine:
         # and slot admission (jitted: the eager vmap path costs ms per call)
         self._keys_first = jax.jit(self._keys_first_impl)
         # paged "shadow" read path: per-chunk view gather + span writeback
-        self._gather_views = jax.jit(lm.paged_views)
+        self._gather_views = jax.jit(
+            lambda caches, table: lm.paged_views(caches, table, shard)
+        )
         self._writeback_chunk = jax.jit(
-            lm.writeback_paged_chunk, static_argnums=(4,),
+            lambda caches, view, table, pos0, steps:
+                lm.writeback_paged_chunk(caches, view, table, pos0, steps, shard),
+            static_argnums=(4,),
             donate_argnums=(0,),   # pools update in place; the view's
                                    # shapes can't alias the pool buffers
         )
+
+    # ------------------------------------------------------------------
+    # cache construction: on a mesh the trees are built under jit with
+    # explicit out_shardings (dist/sharding.py derives them from the
+    # cache_axes / paged_cache_axes trees), so the KV store is born
+    # distributed; without a mesh this is the eager pre-mesh path.
+    # ------------------------------------------------------------------
+
+    def _make_dense_caches(self, slots: int):
+        if self.shard is None:
+            return lm.init_caches(self.model, slots, self.cfg.max_seq, self._dt)
+        prog = self._cache_init_progs.get(("dense", slots))
+        if prog is None:
+            sh = self.shard.cache_shardings(
+                self.model, slots, self.cfg.max_seq, self._dt
+            )
+            prog = jax.jit(
+                lambda: lm.init_caches(
+                    self.model, slots, self.cfg.max_seq, self._dt
+                ),
+                out_shardings=sh,
+            )
+            self._cache_init_progs[("dense", slots)] = prog
+        return prog()
+
+    def _make_paged_caches(self, pool_blocks: int, block_size: int):
+        if self.shard is None:
+            return lm.init_paged_caches(
+                self.model, pool_blocks, block_size, self._dt
+            )
+        key = ("paged", pool_blocks, block_size)
+        prog = self._cache_init_progs.get(key)
+        if prog is None:
+            sh = self.shard.paged_cache_shardings(
+                self.model, pool_blocks, block_size, self._dt
+            )
+            prog = jax.jit(
+                lambda: lm.init_paged_caches(
+                    self.model, pool_blocks, block_size, self._dt
+                ),
+                out_shardings=sh,
+            )
+            self._cache_init_progs[key] = prog
+        return prog()
 
     # ------------------------------------------------------------------
     # per-row PRNG: key chain = fold_in(base, request_id), split per token
@@ -225,7 +328,8 @@ class Engine:
         def body(carry, _):
             tok, caches, pos, keys, eos_hit = carry
             lg, caches = lm.decode_step(
-                params, self.model, tok, caches, pos, self._dt, table
+                params, self.model, tok, caches, pos, self._dt, table,
+                self.shard,
             )
             pairs = jax.vmap(jax.random.split)(keys)
             keys, kt = pairs[:, 0], pairs[:, 1]
@@ -498,7 +602,7 @@ class Engine:
                 PrefixCache(bs_blk)
                 if self.cfg.prefix_caching and not kv_quant else None
             )
-            caches = lm.init_paged_caches(self.model, pool_blocks, bs_blk, self._dt)
+            caches = self._make_paged_caches(pool_blocks, bs_blk)
             tables = np.zeros((slots, n_logical), np.int32)  # 0 == sentinel
             tables_dev = {"arr": None, "dirty": True}  # upload-once per change
             covered = np.zeros((slots,), np.int64)     # blocks bound per slot
@@ -509,7 +613,7 @@ class Engine:
                                                # without re-hashing)
         else:
             prefix = None
-            caches = lm.init_caches(self.model, slots, self.cfg.max_seq, self._dt)
+            caches = self._make_dense_caches(slots)
         # host mirrors of the per-slot device state fed to each chunk
         tok = np.zeros((slots, 1), np.int32)
         pos = np.zeros((slots,), np.int32)
@@ -786,6 +890,7 @@ class Engine:
             "request_latency_s": latency,
             "useful_tokens": int(sum(budget_used(bufs[i], budgets[i], eos)
                                      for i in range(n))),
+            "mesh_shape": dict(self.shard.mesh.shape) if self.shard else None,
         }
         if paged:
             # after drain every block is free or prefix-cache-held (rc 1):

@@ -1,19 +1,62 @@
 """Test-suite bootstrap.
 
-When the real ``hypothesis`` package is unavailable (it is declared in
-requirements.txt and installed in CI, but hermetic containers may lack it),
-install a deterministic mini property-testing shim under the same module
-names so the property tests still *run* — each ``@given`` draws
-``max_examples`` pseudo-random examples from a fixed seed.  The shim covers
-exactly the API surface this suite uses: ``given``, ``settings``,
-``strategies.integers/floats/sampled_from/booleans/just``.
+Two services:
+
+* :func:`run_jax_subprocess` (also a fixture, ``jax_subprocess``) — run a
+  python snippet or argv in a SUBPROCESS with a clean jax environment:
+  ``JAX_PLATFORMS=cpu`` always (without it jax probes the TPU runtime on
+  TPU-image hosts and spends minutes in GCP-metadata retries) and, for
+  ``devices > 1``, ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+  set BEFORE jax initialises — the only way to fake a multi-device host.
+  Sharding/dist tests use this instead of hand-rolling env plumbing.
+
+* a deterministic mini property-testing shim installed under the
+  ``hypothesis`` module names when the real package is unavailable (it is
+  declared in requirements.txt and installed in CI, but hermetic containers
+  may lack it), so the property tests still *run* — each ``@given`` draws
+  ``max_examples`` pseudo-random examples from a fixed seed.  The shim
+  covers exactly the API surface this suite uses: ``given``, ``settings``,
+  ``strategies.integers/floats/sampled_from/booleans/just``.
 """
 
 from __future__ import annotations
 
 import random
+import subprocess
 import sys
 import types
+
+import pytest
+
+
+def run_jax_subprocess(
+    code: str | None = None,
+    argv: list[str] | None = None,
+    devices: int = 1,
+    timeout: int = 900,
+    env_extra: dict | None = None,
+) -> subprocess.CompletedProcess:
+    """Run ``python -c code`` (or ``python *argv``) with the repo on
+    PYTHONPATH, jax forced onto CPU, and optionally ``devices`` fake host
+    devices.  Returns the CompletedProcess (caller asserts on
+    returncode/stdout)."""
+    assert (code is None) != (argv is None), "pass exactly one of code/argv"
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"}
+    if devices > 1:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    if env_extra:
+        env.update(env_extra)
+    cmd = [sys.executable] + (["-c", code] if code is not None else list(argv))
+    return subprocess.run(
+        cmd, capture_output=True, text=True, timeout=timeout, env=env, cwd=".",
+    )
+
+
+@pytest.fixture
+def jax_subprocess():
+    """Fixture handle on :func:`run_jax_subprocess` (multi-device CPU
+    subprocess runner) for tests that prefer injection over import."""
+    return run_jax_subprocess
 
 try:  # pragma: no cover - prefer the real thing
     import hypothesis  # noqa: F401

@@ -7,14 +7,12 @@ divisible PartitionSpecs and the train/prefill/decode graphs compile with
 collectives.
 """
 
-import subprocess
-import sys
 import textwrap
+
+from conftest import run_jax_subprocess
 
 SCRIPT = textwrap.dedent(
     """
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro import configs
@@ -89,14 +87,6 @@ SCRIPT = textwrap.dedent(
 
 
 def test_multiaxis_lowering_subprocess():
-    proc = subprocess.run(
-        [sys.executable, "-c", SCRIPT],
-        capture_output=True, text=True, timeout=1200,
-        # JAX_PLATFORMS=cpu: the script fakes host devices; without it jax
-        # may probe a TPU runtime (slow metadata retries on TPU-image hosts)
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "JAX_PLATFORMS": "cpu"},
-        cwd=".",
-    )
+    proc = run_jax_subprocess(SCRIPT, devices=8, timeout=1200)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ALL_OK" in proc.stdout

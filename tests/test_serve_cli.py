@@ -7,8 +7,8 @@ smoke runs of the static and continuous engines at reduced shapes.
 """
 
 import subprocess
-import sys
 
+from conftest import run_jax_subprocess
 from repro.launch.serve import build_parser, pick_config
 
 ARCH = "qwen1.5-0.5b"
@@ -28,16 +28,12 @@ def test_pick_config_selects_both_paths():
     assert reduced.model.name == full.model.name
 
 
-def _run_cli(*extra: str) -> subprocess.CompletedProcess:
-    return subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", ARCH,
-         "--requests", "3", "--batch", "2", "--prompt-len", "8",
-         "--max-new", "4", *extra],
-        capture_output=True, text=True, timeout=900,
-        # JAX_PLATFORMS=cpu: without it jax may probe a TPU runtime (slow
-        # metadata retries on TPU-image hosts)
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "JAX_PLATFORMS": "cpu"}, cwd=".",
+def _run_cli(*extra: str, devices: int = 1) -> subprocess.CompletedProcess:
+    return run_jax_subprocess(
+        argv=["-m", "repro.launch.serve", "--arch", ARCH,
+              "--requests", "3", "--batch", "2", "--prompt-len", "8",
+              "--max-new", "4", *extra],
+        devices=devices,
     )
 
 
@@ -60,6 +56,30 @@ def test_cli_paged_engine_smoke():
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "[serve:paged]" in proc.stdout, proc.stdout
     assert "blocks_watermark=" in proc.stdout, proc.stdout
+
+
+def test_cli_mesh_continuous_smoke():
+    """--mesh 2x2 on a forced-4-device host: the continuous engine runs on
+    a real (data, model) mesh end to end (sharded params + KV)."""
+    proc = _run_cli("--engine", "continuous", "--chunk-steps", "2",
+                    "--mesh", "2x2", devices=4)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "mesh={'data': 2, 'model': 2}" in proc.stdout, proc.stdout
+    assert "[serve:continuous]" in proc.stdout, proc.stdout
+
+
+def test_cli_mesh_1x1_static_smoke():
+    """--mesh 1x1 works on a plain single-device host (the degenerate mesh
+    is the bit-identical fallback path)."""
+    proc = _run_cli("--mesh", "1x1")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "[serve:static]" in proc.stdout, proc.stdout
+
+
+def test_cli_mesh_invalid_shape_errors():
+    proc = _run_cli("--mesh", "3x3")   # 9 devices on a 1-device host
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)
+    assert "host mesh 3x3" in proc.stderr, proc.stderr
 
 
 def test_cli_paged_requires_continuous():
