@@ -95,6 +95,9 @@ def run() -> list[tuple[str, float, str]]:
     # warm every jitted shape once, then interleave timed repeats and keep
     # the best wall per engine (host timings swing 2-3x run to run)
     run_static(), run_continuous()
+    warm_programs = {
+        n: s["programs"] for n, s in eng.compiles.snapshot().items()
+    }
     st, ct = None, None
     for _ in range(w["reps"]):
         s, c = run_static(), run_continuous()
@@ -102,6 +105,17 @@ def run() -> list[tuple[str, float, str]]:
             st = s
         if ct is None or c["wall_s"] < ct["wall_s"]:
             ct = c
+    # retrace sentinel: the warmup pass must have compiled every program the
+    # timed repeats run — a program appearing here means a shape leaked into
+    # a traced argument and a timed rep paid an XLA compile
+    end_programs = {
+        n: s["programs"] for n, s in eng.compiles.snapshot().items()
+    }
+    retraced = {
+        n: end_programs[n] - warm_programs.get(n, 0)
+        for n in end_programs
+        if end_programs[n] != warm_programs.get(n, 0)
+    }
 
     static_row = {
         "wall_s": st["wall_s"],
@@ -135,6 +149,11 @@ def run() -> list[tuple[str, float, str]]:
             "smoke": _smoke(),
         },
         "engines": {"static": static_row, "continuous": cont_row},
+        # compile/retrace counters (kanlint retrace sentinel): distinct
+        # compiled programs + total traces per jitted entry point, and any
+        # programs compiled AFTER warmup (must stay empty)
+        "compiles": eng.compiles.snapshot(),
+        "programs_after_warmup": retraced,
         "continuous_speedup_tokens_per_s":
             cont_row["tokens_per_s"] / static_row["tokens_per_s"],
         "continuous_utilization_gain":
@@ -152,4 +171,7 @@ def run() -> list[tuple[str, float, str]]:
         ("serve.speedup", 0.0,
          f"x{rep['continuous_speedup_tokens_per_s']:.2f} tok/s, "
          f"x{rep['continuous_utilization_gain']:.2f} utilization"),
+        ("serve.compiles", 0.0,
+         f"programs={sum(end_programs.values())} "
+         f"retraced_after_warmup={sum(retraced.values())}"),
     ]

@@ -1,0 +1,85 @@
+"""kanlint: static analysis + contract enforcement for this repo.
+
+Four rule families (DESIGN.md §8 is the invariant catalogue):
+
+* **KL1xx AST lints** (``ast_rules.py``) — jit donation, host-sync,
+  float64-on-device-path, impure-traced-function checks over ``src/``;
+* **KL2xx kernel-config validator** (``kernel_configs.py``) — autotuner
+  candidate spaces / defaults / measurement-cache entries against VMEM,
+  tiling-alignment, and grid budgets;
+* **KL105 sharding audit** (``sharding_audit.py``) — public cache-mutating
+  model entry points must thread ``ShardingCtx`` or be allowlisted;
+* **retrace sentinel** (``retrace.py``) — runtime compile counting per
+  (name, abstract signature), exported by the serving engine as
+  ``last_serve_stats["compiles"]``.
+
+Drivers: ``python -m repro.analysis --check src`` (CI) and
+``python -m repro.launch.lint`` (the launcher-flavoured CLI).  Suppression:
+``# kanlint: ignore[KLxxx]`` pragmas on the flagged line, and the
+checked-in ``kanlint.baseline.json`` for accepted pre-existing findings
+(CI fails only on findings not in it).
+
+This module stays import-light: the engine imports ``analysis.retrace`` on
+its hot path, so rule modules load lazily inside :func:`run_check`.
+"""
+
+from __future__ import annotations
+
+import os
+
+DEFAULT_BASELINE = "kanlint.baseline.json"
+
+
+def collect_py_files(paths: list[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(
+                d for d in dirs
+                if d not in ("__pycache__", ".git") and not d.startswith(".")
+            )
+            out.extend(
+                os.path.join(root, f) for f in sorted(files)
+                if f.endswith(".py")
+            )
+    return out
+
+
+def _rel(path: str) -> str:
+    rel = os.path.relpath(path)
+    return (path if rel.startswith("..") else rel).replace(os.sep, "/")
+
+
+def run_check(
+    paths: list[str],
+    baseline_path: str | None = None,
+    kernel_validator: bool = True,
+) -> dict:
+    """Run every rule family; returns a report dict:
+    ``{"new": [Finding], "baselined": [Finding], "files": int}``."""
+    from repro.analysis import ast_rules, findings, sharding_audit
+
+    all_findings = []
+    pragmas_by_path: dict[str, dict] = {}
+    files = collect_py_files(paths)
+    for path in files:
+        rel = _rel(path)
+        try:
+            with open(path, encoding="utf-8") as fh:
+                source = fh.read()
+        except (OSError, UnicodeDecodeError):
+            continue
+        pragmas_by_path[rel] = findings.file_pragmas(source)
+        all_findings.extend(ast_rules.lint_source(source, rel))
+        all_findings.extend(sharding_audit.audit_source(source, rel))
+    if kernel_validator:
+        from repro.analysis import kernel_configs
+
+        all_findings.extend(kernel_configs.validate_all())
+    kept = findings.apply_pragmas(all_findings, pragmas_by_path)
+    baseline = findings.load_baseline(baseline_path or DEFAULT_BASELINE)
+    new, old = findings.split_baselined(kept, baseline)
+    return {"new": new, "baselined": old, "files": len(files)}

@@ -1,0 +1,56 @@
+"""CLI: ``python -m repro.analysis --check src`` (the CI lint tier).
+
+Exit codes: 0 clean (or all findings baselined/waived), 1 new findings,
+2 usage error.  ``--update-baseline`` rewrites the baseline to the current
+finding set (the sanctioned way to accept pre-existing debt — shrink it,
+never grow it casually; DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import DEFAULT_BASELINE, run_check
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--check", action="store_true",
+                    help="explicit check mode (the default; kept so CI "
+                         "invocations read as intent)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="accept current findings into the baseline")
+    ap.add_argument("--no-kernel-validator", action="store_true",
+                    help="skip the KL2xx kernel-config validation")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    paths = args.paths or ["src"]
+    report = run_check(
+        paths, baseline_path=args.baseline,
+        kernel_validator=not args.no_kernel_validator,
+    )
+    new, old = report["new"], report["baselined"]
+    if args.update_baseline:
+        from repro.analysis.findings import save_baseline
+
+        save_baseline(args.baseline, new + old)
+        print(f"[kanlint] baseline updated: {len(new + old)} finding(s) "
+              f"-> {args.baseline}")
+        return 0
+    for f in new:
+        print(f.format())
+    print(f"[kanlint] {report['files']} files: {len(new)} new finding(s), "
+          f"{len(old)} baselined")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,489 @@
+"""AST lints for JAX footguns (kanlint KL1xx).
+
+Pure-``ast`` passes — no imports of the scanned code, so the linter can
+judge a broken tree.  Rules (DESIGN.md §8):
+
+* **KL101 missing donation** — a jitted callable takes a mutable-pytree
+  argument (``caches``/``pool``/``view``/...) that is not listed in
+  ``donate_argnums``.  Serving mutates KV in place; forgetting the donation
+  silently doubles peak cache memory.
+* **KL102 host sync** — ``np.asarray``/``np.array``/``float()``/``.item()``
+  applied to a value produced by a jitted callable, outside a ``return``
+  statement.  Each one is a blocking device->host transfer; hot loops must
+  batch reads through the one sanctioned ``jax.device_get`` call.
+* **KL103 float64 on a device path** — ``np.float64``/``jnp.float64``
+  tokens inside traced functions or under the device-path packages
+  (``models``/``kernels``/``serve``/``dist``).  x64 is disabled; a float64
+  constant promotes on host and truncates on device, so these are at best
+  dead precision and at worst a host/device divergence.  Host-side
+  precompute (``core/`` knot/LUT construction) is deliberately out of
+  scope.
+* **KL104 impure traced function** — ``time.*``/``random.*``/
+  ``np.random.*``/``datetime.*`` called inside a function passed to a
+  tracing combinator (``jit``/``scan``/``vmap``/``grad``/``pallas_call``).
+  These execute ONCE at trace time and freeze into the program — a classic
+  silent-staleness bug.
+
+Resolution machinery shared by the rules: jit-site detection (including the
+engine's local ``_jit`` helper and ``analysis.retrace.counting`` wrappers,
+which are unwrapped transparently), lambda/def/method resolution through
+lexical scopes, and literal ``donate_argnums`` parsing.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+# Call targets that wrap a python callable in a compiled program.  The
+# first positional argument is the traced function.
+JIT_NAMES = {"jax.jit", "jit", "_jit", "pjit", "jax.pjit"}
+TRACE_NAMES = JIT_NAMES | {
+    "jax.lax.scan", "lax.scan", "jax.vmap", "vmap", "jax.pmap",
+    "jax.grad", "grad", "jax.checkpoint", "jax.remat", "checkpoint",
+    "pl.pallas_call", "pallas_call", "shard_map",
+}
+# Transparent wrappers: counting(fn, name, registry) from analysis.retrace
+# (and the engine's local `_count` alias for it) preserves the signature,
+# so lint through it to the real callable.
+TRANSPARENT_WRAPPERS = {"counting", "retrace.counting", "_count"}
+
+# Argument names that, by repo convention, bind the big mutable pytrees
+# (KV caches, block pools, gathered views).
+DONATABLE_PARAMS = {
+    "cache", "caches", "pool", "pools", "view", "views", "kv", "cache_ckv",
+}
+
+# KL102: host-readback callables and the sanctioned batch-transfer API.
+READBACK_FUNCS = {
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array", "float",
+}
+# KL103: float64 tokens and the directories where device code lives.
+F64_TOKENS = {"np.float64", "numpy.float64", "jnp.float64", "jax.numpy.float64"}
+DEVICE_PATH_DIRS = {"models", "kernels", "serve", "dist"}
+# KL104: modules whose calls are frozen-at-trace-time side effects.
+IMPURE_ROOTS = {"time", "random", "datetime"}
+IMPURE_PREFIXES = ("np.random.", "numpy.random.")
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'jax.jit' for Attribute chains, 'jit' for Names, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _annotate_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._kl_parent = node  # type: ignore[attr-defined]
+
+
+def _parents(node: ast.AST):
+    cur = getattr(node, "_kl_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_kl_parent", None)
+
+
+def _resolve_name(name: str, site: ast.AST) -> ast.FunctionDef | None:
+    """Find the def a Name refers to, nearest lexical scope first."""
+    for scope in _parents(site):
+        if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Module)):
+            for stmt in getattr(scope, "body", []):
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and stmt.name == name:
+                    return stmt
+    return None
+
+
+def _resolve_self_attr(attr: str, site: ast.AST) -> ast.FunctionDef | None:
+    """self.X -> method X of the enclosing class."""
+    for scope in _parents(site):
+        if isinstance(scope, ast.ClassDef):
+            for stmt in scope.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and stmt.name == attr:
+                    return stmt
+    return None
+
+
+def _unwrap_transparent(node: ast.AST) -> ast.AST:
+    while isinstance(node, ast.Call) and \
+            _dotted(node.func) in TRANSPARENT_WRAPPERS and node.args:
+        node = node.args[0]
+    return node
+
+
+def _wrapped_params(
+    fn_arg: ast.AST, site: ast.AST
+) -> tuple[list[str], ast.AST | None]:
+    """Resolve a jit site's first argument to (param names, body node).
+
+    Bound-method references (``self.X``) drop the leading ``self`` — jit
+    argnums index the *call-time* arguments.  Unresolvable targets return
+    ``([], None)`` (no finding: never guess).
+    """
+    fn_arg = _unwrap_transparent(fn_arg)
+    if isinstance(fn_arg, ast.Lambda):
+        return [a.arg for a in fn_arg.args.args], fn_arg
+    target = None
+    if isinstance(fn_arg, ast.Name):
+        target = _resolve_name(fn_arg.id, site)
+    elif isinstance(fn_arg, ast.Attribute) and \
+            isinstance(fn_arg.value, ast.Name) and fn_arg.value.id == "self":
+        target = _resolve_self_attr(fn_arg.attr, site)
+    if target is None:
+        return [], None
+    params = [a.arg for a in target.args.args]
+    if params and params[0] == "self":
+        params = params[1:]
+    return params, target
+
+
+def _literal_argnums(call: ast.Call, kw_name: str) -> set[int] | None:
+    """Parse ``donate_argnums=(2,)``-style keywords.  Returns None when the
+    keyword exists but is not a literal (rule then abstains)."""
+    for kw in call.keywords:
+        if kw.arg == kw_name:
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return {v.value}
+            if isinstance(v, ast.Tuple) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts
+            ):
+                return {e.value for e in v.elts}
+            return None
+    return set()
+
+
+def _jit_sites(tree: ast.AST) -> list[tuple[ast.Call, ast.AST]]:
+    """Every (jit call, wrapped-fn expression) in the module, covering both
+    ``x = jax.jit(fn, ...)`` calls and ``@jax.jit`` / ``@partial(jax.jit,
+    ...)`` decorators (the decorator's "first argument" is the def)."""
+    sites: list[tuple[ast.Call, ast.AST]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in JIT_NAMES \
+                and node.args:
+            sites.append((node, node.args[0]))
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    d = _dotted(dec.func)
+                    if d in JIT_NAMES:
+                        sites.append((dec, _def_ref(node)))
+                    elif d in ("functools.partial", "partial") and dec.args \
+                            and _dotted(dec.args[0]) in JIT_NAMES:
+                        sites.append((dec, _def_ref(node)))
+                elif _dotted(dec) in JIT_NAMES:
+                    # bare ``@jax.jit``: no kwargs possible, so model it as
+                    # a zero-keyword call site at the decorator's line
+                    synthetic = ast.Call(func=dec, args=[], keywords=[])
+                    synthetic.lineno = dec.lineno
+                    sites.append((synthetic, _def_ref(node)))
+    return sites
+
+
+class _DefRef(ast.AST):
+    """Marker wrapping a decorated def so _wrapped_params can use it."""
+    _fields = ()
+
+    def __init__(self, target):
+        self.target = target
+
+
+def _def_ref(node):
+    return _DefRef(node)
+
+
+# ---------------------------------------------------------------------------
+# KL101 — missing donation
+# ---------------------------------------------------------------------------
+
+
+def check_donation(tree: ast.AST, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for call, fn_arg in _jit_sites(tree):
+        if isinstance(fn_arg, _DefRef):
+            target = fn_arg.target
+            params = [a.arg for a in target.args.args]
+            in_class = any(isinstance(p, ast.ClassDef)
+                           for p in _parents(target))
+            if in_class and params and params[0] == "self":
+                params = params[1:]
+        else:
+            params, _ = _wrapped_params(fn_arg, call)
+        if not params:
+            continue
+        donate = _literal_argnums(call, "donate_argnums")
+        if donate is None:     # non-literal donate_argnums: abstain
+            continue
+        for i, p in enumerate(params):
+            if p in DONATABLE_PARAMS and i not in donate:
+                out.append(Finding(
+                    "KL101", path, call.lineno,
+                    f"jitted callable takes mutable pytree '{p}' "
+                    f"(argnum {i}) without donating it",
+                    f"add {i} to donate_argnums, or waive with "
+                    f"'# kanlint: ignore[KL101]' if the buffer must "
+                    f"outlive the call",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KL102 — host readbacks on jitted results
+# ---------------------------------------------------------------------------
+
+
+def _jitted_attrs(cls: ast.ClassDef) -> set[str]:
+    """Attribute names bound to jitted callables anywhere in the class:
+    ``self.X = jax.jit(...)`` / ``self.X = _jit(...)``."""
+    out: set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and _dotted(node.value.func) in JIT_NAMES:
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name) and t.value.id == "self":
+                    out.add(t.attr)
+    return out
+
+
+def _assign_targets(stmt: ast.Assign) -> list[str]:
+    names: list[str] = []
+    for t in stmt.targets:
+        if isinstance(t, ast.Name):
+            names.append(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            names.extend(e.id for e in t.elts if isinstance(e, ast.Name))
+    return names
+
+
+def _readback_calls(expr: ast.AST, tainted: set[str]) -> list[tuple[int, str]]:
+    """(line, tainted name) for each host-sync call on a tainted value in
+    ``expr``.  ``jax.device_get`` is the sanctioned batch transfer — its
+    subtree is skipped entirely."""
+    hits: list[tuple[int, str]] = []
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d == "jax.device_get":
+                return      # sanctioned; don't descend into its args
+            name = None
+            if d in READBACK_FUNCS and node.args:
+                a = node.args[0]
+                if isinstance(a, ast.Name):
+                    name = a.id
+                elif isinstance(a, ast.Subscript) and \
+                        isinstance(a.value, ast.Name):
+                    name = a.value.id
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item":
+                v = node.func.value
+                if isinstance(v, ast.Name):
+                    name = v.id
+                elif isinstance(v, ast.Subscript) and \
+                        isinstance(v.value, ast.Name):
+                    name = v.value.id
+            if name is not None and name in tainted:
+                hits.append((node.lineno, name))
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return hits
+
+
+def _scan_taint(fn: ast.FunctionDef, jitted: set[str], path: str,
+                out: list[Finding]) -> None:
+    """Linear taint walk over one function body.  Names assigned from
+    ``self.<jitted>`` calls are device values; reassignment from anything
+    else clears the taint.  ``return``ed readbacks are exempt — a single
+    final transfer is the API's contract, not a hot-loop sync."""
+    tainted: set[str] = set()
+
+    def is_jitted_call(v: ast.AST) -> bool:
+        return (
+            isinstance(v, ast.Call)
+            and isinstance(v.func, ast.Attribute)
+            and isinstance(v.func.value, ast.Name)
+            and v.func.value.id == "self"
+            and v.func.attr in jitted
+        )
+
+    def flag(expr: ast.AST) -> None:
+        for line, name in _readback_calls(expr, tainted):
+            out.append(Finding(
+                "KL102", path, line,
+                f"host readback of jitted result '{name}' in a serving "
+                f"loop (implicit device sync)",
+                "batch reads through one jax.device_get((...)) per chunk",
+            ))
+
+    def walk_stmts(stmts: list[ast.stmt]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _scan_taint(stmt, jitted, path, out)   # fresh scope
+                continue
+            if isinstance(stmt, ast.Return):
+                continue       # final-transfer exemption
+            if isinstance(stmt, ast.Assign):
+                flag(stmt.value)
+                names = _assign_targets(stmt)
+                if is_jitted_call(stmt.value) or (
+                    isinstance(stmt.value, ast.Tuple) and any(
+                        is_jitted_call(e) for e in stmt.value.elts)
+                ):
+                    tainted.update(names)
+                else:
+                    tainted.difference_update(names)
+                continue
+            # flag reads in other statement kinds, then recurse into blocks
+            for field in ("value", "test", "iter"):
+                sub = getattr(stmt, field, None)
+                if sub is not None and isinstance(sub, ast.AST):
+                    flag(sub)
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if isinstance(sub, list) and sub and \
+                        isinstance(sub[0], ast.stmt):
+                    walk_stmts(sub)
+
+    walk_stmts(fn.body)
+
+
+def check_host_sync(tree: ast.AST, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            jitted = _jitted_attrs(node)
+            if not jitted:
+                continue
+            for stmt in node.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    _scan_taint(stmt, jitted, path, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KL103 — float64 on device paths
+# ---------------------------------------------------------------------------
+
+
+def _traced_functions(tree: ast.AST) -> set[ast.AST]:
+    """Function/lambda nodes handed to tracing combinators (transitively
+    via nested defs: a scan body inside a jitted method is inside its
+    subtree, so one membership check per node suffices)."""
+    traced: set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        if _dotted(node.func) not in TRACE_NAMES:
+            continue
+        fn_arg = _unwrap_transparent(node.args[0])
+        if isinstance(fn_arg, ast.Lambda):
+            traced.add(fn_arg)
+        else:
+            _, target = _wrapped_params(fn_arg, node)
+            if target is not None:
+                traced.add(target)
+    # decorated defs: @jax.jit / @functools.partial(jax.jit, ...)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = _dotted(dec.func) if isinstance(dec, ast.Call) \
+                    else _dotted(dec)
+                if d in JIT_NAMES or (
+                    isinstance(dec, ast.Call)
+                    and d in ("functools.partial", "partial") and dec.args
+                    and _dotted(dec.args[0]) in JIT_NAMES
+                ):
+                    traced.add(node)
+    return traced
+
+
+def _in_traced(node: ast.AST, traced: set[ast.AST]) -> bool:
+    if node in traced:
+        return True
+    return any(p in traced for p in _parents(node))
+
+
+def check_float64(tree: ast.AST, path: str) -> list[Finding]:
+    on_device_path = bool(DEVICE_PATH_DIRS & set(path.split("/")))
+    traced = None
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and _dotted(node) in F64_TOKENS:
+            if not on_device_path:
+                if traced is None:
+                    traced = _traced_functions(tree)
+                if not _in_traced(node, traced):
+                    continue
+            out.append(Finding(
+                "KL103", path, node.lineno,
+                f"float64 token '{_dotted(node)}' reachable from a device "
+                f"path (x64 is disabled; this truncates under jit)",
+                "compute in float32, or move the fp64 precompute to core/",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KL104 — impure calls inside traced functions
+# ---------------------------------------------------------------------------
+
+
+def _impure_call(dotted: str | None) -> bool:
+    if not dotted:
+        return False
+    if dotted.startswith(IMPURE_PREFIXES):
+        return True
+    root = dotted.split(".")[0]
+    return root in IMPURE_ROOTS and "." in dotted
+
+
+def check_traced_purity(tree: ast.AST, path: str) -> list[Finding]:
+    traced = _traced_functions(tree)
+    out: list[Finding] = []
+    seen: set[tuple[int, str]] = set()
+    for fn in traced:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if _impure_call(d) and (node.lineno, d) not in seen:
+                    seen.add((node.lineno, d))
+                    out.append(Finding(
+                        "KL104", path, node.lineno,
+                        f"'{d}' called inside a traced function — it runs "
+                        f"once at trace time and freezes into the program",
+                        "hoist host randomness/clocks out of the traced "
+                        "function; use jax.random with threaded keys",
+                    ))
+    return out
+
+
+ALL_AST_RULES = (
+    check_donation, check_host_sync, check_float64, check_traced_purity,
+)
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Run every KL1xx rule over one file's source."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("KL100", path, e.lineno or 1,
+                        f"syntax error: {e.msg}", "fix the parse error")]
+    _annotate_parents(tree)
+    out: list[Finding] = []
+    for rule in ALL_AST_RULES:
+        out.extend(rule(tree, path))
+    return out

@@ -1,0 +1,75 @@
+"""Sharding-contract audit (kanlint KL105).
+
+PR 5's mesh-native serving contract: **every public cache-mutating entry
+point threads a ``ShardingCtx``** (a ``shard`` parameter) so freshly
+written KV leaves are pinned to their logical-axes shardings — otherwise
+GSPMD is free to gather a "distributed" cache to one device on the first
+in-place update, silently, with no wrong answers to catch it.
+
+The audit is purely syntactic: walk the model-layer modules
+(``models/``), and for every public module-level function that takes a
+cache-like parameter (``cache``/``caches``/``cache_ckv``/``pool``/...),
+require either a ``shard`` parameter or an explicit allowlist entry (with
+the reason recorded here, where the next reader will look).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+
+CACHE_PARAMS = {"cache", "caches", "cache_ckv", "pool", "pools"}
+
+# (module basename, function) -> reason the contract does not apply.
+# Keep reasons honest: an entry here is a reviewed decision, not an escape
+# hatch — read-only accessors and write *primitives* whose callers own the
+# constraint are the only sanctioned shapes.
+ALLOWLIST: dict[tuple[str, str], str] = {
+    ("attention.py", "paged_view"): (
+        "read-only gather; never writes the pool, nothing to pin"
+    ),
+    ("attention.py", "paged_write_span"): (
+        "write primitive shared by every paged path; each caller pins via "
+        "_constrain_cache immediately after (one constraint per step, not "
+        "one per leaf write)"
+    ),
+}
+
+
+def _audited(path: str) -> bool:
+    """The contract governs the model layer (models/lm.py, blocks.py,
+    attention.py and friends)."""
+    return "models" in path.split("/")
+
+
+def audit_source(source: str, path: str) -> list[Finding]:
+    if not _audited(path):
+        return []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return []    # ast_rules reports the parse error
+    basename = path.rsplit("/", 1)[-1]
+    out: list[Finding] = []
+    for node in tree.body:           # module-level defs only
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name.startswith("_"):
+            continue                 # private helpers: callers own the pin
+        params = {a.arg for a in node.args.args + node.args.kwonlyargs}
+        if not (params & CACHE_PARAMS):
+            continue
+        if "shard" in params:
+            continue
+        if (basename, node.name) in ALLOWLIST:
+            continue
+        out.append(Finding(
+            "KL105", path, node.lineno,
+            f"public cache-mutating entry point '{node.name}' neither "
+            f"threads ShardingCtx nor is allowlisted",
+            "add a shard=None parameter and constrain written cache "
+            "leaves, or add an ALLOWLIST entry with its reason in "
+            "analysis/sharding_audit.py",
+        ))
+    return out

@@ -188,14 +188,24 @@ def candidate_tiles(
     """
     backend = backend or jax.default_backend()
     sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
+    lane = 128 if backend == "tpu" else 8
     unit = _contract_unit(kernel, M, nnz)
+    # Every emitted bb/bn is dtype-sublane / lane aligned (rounding the
+    # friendly sizes UP before clamping): a bb=8 sparse candidate under
+    # bf16's 16-sublane granularity, or a bn=64 TPU candidate, is a config
+    # Mosaic would reject — the kernel-config lint (KL202) now enforces
+    # that no such candidate can be emitted.
     if is_sparse_kernel(kernel):
-        bbs = sorted({min(b, _round_up(BS, sub)) for b in (8, 16, 32)})
-        bns = sorted({min(b, _round_up(N, 8)) for b in (64, 128, 256)})
+        bbs = sorted({min(_round_up(b, sub), _round_up(BS, sub))
+                      for b in (8, 16, 32)})
+        bns = sorted({min(_round_up(b, lane), _round_up(N, lane))
+                      for b in (64, 128, 256)})
         bk_opts = (16, 32, 64, 128, 256)
     else:
-        bbs = sorted({min(b, _round_up(BS, sub)) for b in (32, 64, 128, 256)})
-        bns = sorted({min(b, _round_up(N, 8)) for b in (64, 128, 256)})
+        bbs = sorted({min(_round_up(b, sub), _round_up(BS, sub))
+                      for b in (32, 64, 128, 256)})
+        bns = sorted({min(_round_up(b, lane), _round_up(N, lane))
+                      for b in (64, 128, 256)})
         bk_opts = (4, 8, 16, 32, 64, 128)
     bks = sorted({min(b, K) for b in bk_opts if b * unit <= _MAX_CONTRACT})
     out: list[Tiles] = []
@@ -222,6 +232,24 @@ def _valid_tiles(hit) -> Tiles | None:
     return None
 
 
+def clamp_default(
+    kernel: str, backend: str, BS: int, K: int, N: int, dtype
+) -> Tiles:
+    """The DEFAULTS entry as resolved for one problem: clamped so small-K
+    (or N just over the gate) shapes don't pay large padding multiples,
+    then ``bb`` re-rounded UP to the dtype's sublane granularity — the
+    decode-shaped sparse default (bb=8) is only aligned under fp32; under
+    bf16/int8 the clamp itself must restore alignment.  This is the ONE
+    definition both ``get_tiles`` and the kernel-config lint validate."""
+    sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
+    bb, bn, bk = DEFAULTS[(kernel, backend)]
+    return (
+        _round_up(min(bb, _round_up(BS, sub)), sub),
+        min(bn, _round_up(N, 8)),
+        min(bk, K),
+    )
+
+
 def get_tiles(
     kernel: str, BS: int, K: int, N: int, M: int,
     dtype=jax.numpy.float32, backend: str | None = None,
@@ -240,15 +268,7 @@ def get_tiles(
             else min(BS, N) >= 128
         )
         if use:
-            # Clamp to the problem so small-K (or N just over the gate)
-            # shapes don't pay large padding multiples.
-            sub = _SUBLANE.get(jax.numpy.dtype(dtype).name, 8)
-            bb, bn, bk = DEFAULTS[(kernel, backend)]
-            return (
-                min(bb, _round_up(BS, sub)),
-                min(bn, _round_up(N, 8)),
-                min(bk, K),
-            )
+            return clamp_default(kernel, backend, BS, K, N, dtype)
     return _heuristic(kernel, BS, K, N, M, dtype, backend, nnz)
 
 

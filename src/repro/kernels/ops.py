@@ -24,6 +24,26 @@ from repro.kernels import kan_int8_gemm as _int8
 from repro.kernels import kan_sparse_gemm as _sparse
 
 
+# Registered Pallas kernels, for the kernel-config lint
+# (``repro.analysis.kernel_configs``): the dtypes each kernel serves, a
+# representative basis count M (and nnz = P+1 for the sparse datapath,
+# default G=5/P=3 grid), whether the kernel fuses a base term (an extra
+# (bk, bn) VMEM block per grid step), and the output element size when it
+# differs from the input dtype (the int8 kernels accumulate int32 and emit
+# fp32 from the fused dequant epilogue).  Adding a kernel without
+# registering it here fails the lint CLI's coverage check.
+KERNELS: dict[str, dict] = {
+    "fused": {"M": 8, "dtypes": ("float32", "bfloat16"), "base": True},
+    "int8": {"M": 8, "dtypes": ("int8",), "base": False, "out_bytes": 4},
+    "sparse": {
+        "M": 8, "nnz": 4, "dtypes": ("float32", "bfloat16"), "base": True,
+    },
+    "sparse_int8": {
+        "M": 8, "nnz": 4, "dtypes": ("int8",), "base": False, "out_bytes": 4,
+    },
+}
+
+
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 

@@ -1,0 +1,45 @@
+"""Lint launcher: ``python -m repro.launch.lint [paths...]``.
+
+The launcher-flavoured front door to the kanlint subsystem
+(``repro.analysis``): runs the AST lints, the sharding-contract audit, and
+the kernel-config validator, prints a per-rule summary, and exits non-zero
+on new (non-baselined, non-waived) findings — same contract as
+``python -m repro.analysis --check`` that CI runs, plus the summary table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import Counter
+
+from repro.analysis import DEFAULT_BASELINE, run_check
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.lint")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--no-kernel-validator", action="store_true")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    report = run_check(
+        args.paths or ["src"], baseline_path=args.baseline,
+        kernel_validator=not args.no_kernel_validator,
+    )
+    new, old = report["new"], report["baselined"]
+    for f in new:
+        print(f.format())
+    by_rule = Counter(f.rule for f in new)
+    rules = " ".join(f"{r}={n}" for r, n in sorted(by_rule.items())) or "none"
+    print(f"[lint] scanned {report['files']} files: "
+          f"{len(new)} new finding(s) ({rules}), {len(old)} baselined")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

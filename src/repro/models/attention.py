@@ -628,9 +628,12 @@ def mla_decode_step(
     x: jax.Array,                   # (B, 1, d_model)
     cache_ckv: jax.Array,           # (B, S, r + rope) — the compressed latent
     pos: jax.Array,
+    shard=None,                     # optional ShardingCtx (mesh serving)
 ) -> tuple[jax.Array, jax.Array]:
     """MLA decode: the cache stores only the (r + rope)-dim latent — the
-    memory win that makes DeepSeek-V2 serving cheap."""
+    memory win that makes DeepSeek-V2 serving cheap.  Like every other
+    cache-mutating entry point (kanlint KL105), the freshly written latent
+    is pinned to its logical axes under a mesh so GSPMD can't gather it."""
     B = x.shape[0]
     S = cache_ckv.shape[1]
     pos_b = jnp.broadcast_to(pos, (B,))
@@ -648,6 +651,10 @@ def mla_decode_step(
     else:
         cache_ckv = cache_ckv.at[jnp.arange(B), pos_b].set(
             ckv_new[:, 0].astype(cache_ckv.dtype)
+        )
+    if shard is not None:
+        cache_ckv = shard.constrain(
+            cache_ckv, ("batch", "seq_cache", "kv_lora")
         )
 
     c_kv = _qk_rmsnorm(cache_ckv[..., :r], params["kv_norm"])  # (B, S, r)

@@ -404,10 +404,12 @@ def block_decode_step(
                 params["attn"], c, h, cache, table, pos, shard=shard
             )
         elif c.kv_lora_rank is not None:
-            y, ckv = A.mla_decode_step(params["attn"], c, h, cache["ckv"], pos)
+            # shard threads into the step itself (the latent is pinned at
+            # the write, like the GQA paths) — no caller-side special case
+            y, ckv = A.mla_decode_step(
+                params["attn"], c, h, cache["ckv"], pos, shard=shard
+            )
             cache = {"ckv": ckv}
-            if shard is not None:
-                cache = shard.constrain_tree(cache, block_cache_axes(blk))
         else:
             y, cache = A.attn_decode_step(
                 params["attn"], c, h, cache, pos, shard=shard

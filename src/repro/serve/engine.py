@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import RetraceRegistry, counting
 from repro.models import lm
 from repro.serve.kv_pool import BlockPool, blocks_for, worst_case_blocks
 from repro.serve.prefix_cache import PrefixCache
@@ -144,6 +145,15 @@ class Engine:
         self.params = params
         self._cache_init_progs: dict = {}   # (kind, *shape) -> jitted init
         shard = self.shard
+        # Retrace sentinel (repro.analysis.retrace): every jitted program
+        # below is wrapped with counting() BEFORE jit, so each compilation
+        # records (name, abstract signature).  The serving drivers export
+        # the snapshot as last_serve_stats["compiles"], and the retrace
+        # regression tests assert the documented budgets (one decode-chunk
+        # program per chunk config, one prefill program per (group, bucket),
+        # EOS sweeps add zero traces).
+        self.compiles = RetraceRegistry()
+        _count = lambda fn, name: counting(fn, name, self.compiles)  # noqa: E731
 
         def _jit(fn, *, param_argnum=None, **kw):
             """jit that pins the params argument to its sharding tree when a
@@ -161,21 +171,22 @@ class Engine:
             return jax.jit(fn, **kw)
 
         self._prefill = _jit(
-            lambda p, inputs: lm.prefill(
+            _count(lambda p, inputs: lm.prefill(
                 p, self.model, inputs, self.cfg.max_seq, self._dt, shard
-            ),
+            ), "prefill"),
             param_argnum=0, n_args=2,
         )
         self._decode = jax.jit(
-            lambda p, tok, caches, pos: lm.decode_step(
+            _count(lambda p, tok, caches, pos: lm.decode_step(
                 p, self.model, tok, caches, pos, self._dt, None, shard
-            ),
+            ), "decode"),
             donate_argnums=(2,),   # caches update in place
         )
         # scan decode: the whole generation (or one continuous-batching
         # chunk) is one compiled program; retraces per static step count
         self._decode_scan = jax.jit(
-            self._scan_impl, static_argnums=(0,), donate_argnums=(3,)
+            _count(self._scan_impl, "decode_chunk"),
+            static_argnums=(0,), donate_argnums=(3,),
         )
         # continuous batching: prefill an admission *group* of k queued
         # requests in ONE dispatch and splice them into their slots
@@ -183,10 +194,11 @@ class Engine:
         # free in bursts at chunk boundaries, so k-batching amortizes the
         # prefill dispatch overhead that dominates one-at-a-time refills)
         self._prefill_insert = _jit(
-            lambda p, toks, lengths, slots, caches: lm.prefill_into_slots(
-                p, self.model, toks, lengths, slots, caches,
-                self.cfg.max_seq, self._dt, shard,
-            ),
+            _count(lambda p, toks, lengths, slots, caches:
+                   lm.prefill_into_slots(
+                       p, self.model, toks, lengths, slots, caches,
+                       self.cfg.max_seq, self._dt, shard,
+                   ), "prefill_insert"),
             param_argnum=0, n_args=5,
             donate_argnums=(4,),
         )
@@ -196,26 +208,34 @@ class Engine:
         # prefill does), so callers retrace per (group size, padded suffix
         # length, view blocks); the prefix start offset stays traced.
         self._prefill_pages = jax.jit(
-            lambda p, toks, lengths, tables, caches, start, view_blocks:
-                lm.prefill_into_pages(
-                    p, self.model, toks, lengths, tables, caches, start,
-                    self._dt, view_blocks, shard,
-                ),
+            _count(lambda p, toks, lengths, tables, caches, start, view_blocks:
+                   lm.prefill_into_pages(
+                       p, self.model, toks, lengths, tables, caches, start,
+                       self._dt, view_blocks, shard,
+                   ), "prefill_pages"),
             donate_argnums=(4,), static_argnums=(6,),
         )
         # per-row key derivation + first-token sampling, shared by generate
         # and slot admission (jitted: the eager vmap path costs ms per call)
-        self._keys_first = jax.jit(self._keys_first_impl)
-        # paged "shadow" read path: per-chunk view gather + span writeback
-        self._gather_views = jax.jit(
-            lambda caches, table: lm.paged_views(caches, table, shard)
+        self._keys_first = jax.jit(_count(self._keys_first_impl, "keys_first"))
+        # paged "shadow" read path: per-chunk view gather + span writeback.
+        # The gather's input pools are re-read by the writeback at the end
+        # of the same chunk, so they must NOT be donated here:
+        self._gather_views = jax.jit(   # kanlint: ignore[KL101]
+            _count(lambda caches, table: lm.paged_views(caches, table, shard),
+                   "gather_views")
         )
-        self._writeback_chunk = jax.jit(
-            lambda caches, view, table, pos0, steps:
-                lm.writeback_paged_chunk(caches, view, table, pos0, steps, shard),
+        # The view (argnum 1) is dead after its span is written back, but
+        # its slot-shaped leaves (slots, max_seq, ...) can never alias the
+        # pool-shaped outputs (n_blocks, bs, ...), so donating it buys
+        # nothing and makes XLA warn about unusable donations every compile
+        self._writeback_chunk = jax.jit(   # kanlint: ignore[KL101]
+            _count(lambda caches, view, table, pos0, steps:
+                   lm.writeback_paged_chunk(
+                       caches, view, table, pos0, steps, shard),
+                   "writeback_chunk"),
             static_argnums=(4,),
-            donate_argnums=(0,),   # pools update in place; the view's
-                                   # shapes can't alias the pool buffers
+            donate_argnums=(0,),           # pools update in place
         )
 
     # ------------------------------------------------------------------
@@ -234,9 +254,9 @@ class Engine:
                 self.model, slots, self.cfg.max_seq, self._dt
             )
             prog = jax.jit(
-                lambda: lm.init_caches(
+                counting(lambda: lm.init_caches(
                     self.model, slots, self.cfg.max_seq, self._dt
-                ),
+                ), "cache_init", self.compiles),
                 out_shardings=sh,
             )
             self._cache_init_progs[("dense", slots)] = prog
@@ -254,9 +274,9 @@ class Engine:
                 self.model, pool_blocks, block_size, self._dt
             )
             prog = jax.jit(
-                lambda: lm.init_paged_caches(
+                counting(lambda: lm.init_paged_caches(
                     self.model, pool_blocks, block_size, self._dt
-                ),
+                ), "cache_init", self.compiles),
                 out_shardings=sh,
             )
             self._cache_init_progs[key] = prog
@@ -493,6 +513,7 @@ class Engine:
                 next(b["done_s"] for b in buckets if i in b["request_ids"])
                 for i in range(len(requests))
             ],
+            "compiles": self.compiles.snapshot(),
         }
         return results  # type: ignore[return-value]
 
@@ -639,8 +660,9 @@ class Engine:
             or the very first token hit EOS).  One definition keeps the two
             admission paths in bitwise lockstep."""
             rids_a = jnp.asarray(np.asarray([rid for _, rid in pairs], np.int32))
-            kcs_d, firsts_d = self._keys_first(base, rids_a, last)
-            kcs, firsts = np.asarray(kcs_d), np.asarray(firsts_d)
+            # one batched device->host transfer for both results (two bare
+            # np.asarray calls here were two serial syncs — kanlint KL102)
+            kcs, firsts = jax.device_get(self._keys_first(base, rids_a, last))
             for j, (b, rid) in enumerate(pairs):
                 first = int(firsts[j])
                 bufs[rid].append(first)
@@ -891,6 +913,7 @@ class Engine:
             "useful_tokens": int(sum(budget_used(bufs[i], budgets[i], eos)
                                      for i in range(n))),
             "mesh_shape": dict(self.shard.mesh.shape) if self.shard else None,
+            "compiles": self.compiles.snapshot(),
         }
         if paged:
             # after drain every block is free or prefix-cache-held (rc 1):

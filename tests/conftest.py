@@ -58,6 +58,25 @@ def jax_subprocess():
     subprocess runner) for tests that prefer injection over import."""
     return run_jax_subprocess
 
+
+@pytest.fixture
+def assert_trace_budget():
+    """Assert an Engine's retrace sentinel matches a documented program
+    budget: ``check(engine, {"decode_chunk": 1, ...})``.  A *program* is a
+    distinct abstract signature traced for that jitted entry point
+    (``repro.analysis.retrace``); budgets pin the compile counts the serving
+    PRs promised (DESIGN.md invariant catalogue).  Names absent from the
+    budget are unconstrained; names in the budget but never traced count 0.
+    """
+    def check(engine, budget: dict) -> None:
+        snap = engine.compiles.snapshot()
+        got = {n: snap.get(n, {}).get("programs", 0) for n in budget}
+        assert got == budget, (
+            f"trace budget violated: expected {budget}, got {got}; "
+            f"full snapshot: {snap}"
+        )
+    return check
+
 try:  # pragma: no cover - prefer the real thing
     import hypothesis  # noqa: F401
 except ImportError:

@@ -402,6 +402,90 @@ def test_scheduler_detects_slot_leak():
         s.check_invariants()
 
 
+# ---------------------------------------------------------------------------
+# retrace sentinel regression tests (kanlint runtime sentinel; the compile
+# counts below are the documented trace budgets — a new program here means
+# a shape leaked into a traced argument or a static argnum changed)
+# ---------------------------------------------------------------------------
+
+RS2 = np.random.RandomState(23)
+
+
+def fresh_engine(**cfg_kw) -> Engine:
+    """Engine with a virgin jit cache (shares params with the singleton)."""
+    base = get_engine()
+    return Engine(base.params, base.model,
+                  ServeConfig(max_seq=48, max_new_tokens=MAX_NEW, **cfg_kw))
+
+
+def test_retrace_eos_sweep_reuses_decode_program(assert_trace_budget):
+    """``eos_id`` is a traced scalar: sweeping it across generate() calls —
+    including the never-stop sentinel -1 — must not retrace the decode scan
+    (with ``lengths`` given, row positions are per-row for every eos value,
+    so the abstract signature is eos-invariant).  PR 3 documented this
+    contract; the sentinel now machine-checks it."""
+    eng = fresh_engine()
+    prompts = POOL[0][None].astype(np.int32)
+    lens = np.asarray([POOL[0].shape[0]])
+
+    def gen(eos):
+        return eng.generate(prompts, seed=0, lengths=lens,
+                            request_ids=np.asarray([0]),
+                            max_new=MAX_NEW, eos_id=eos)
+
+    probe = gen(-1)
+    live = int(probe[0, 1])          # a token the model really emits
+    outs = {eos: gen(eos) for eos in (0, 5, live, -1)}
+    assert_trace_budget(eng, {"prefill": 1, "decode_chunk": 1,
+                              "keys_first": 1})
+    # and the sweep actually exercised distinct eos behavior: latching on
+    # a truly-emitted token pads the tail, eos=-1 never latches
+    assert not np.array_equal(outs[live], outs[-1])
+    np.testing.assert_array_equal(outs[-1], probe)
+
+
+def test_retrace_repeat_mix_compiles_nothing_new():
+    """Re-serving a workload with the same prompt lengths (fresh token
+    content, different seed) admits through the same pad buckets and must
+    not compile a single new program for ANY entry point."""
+    eng = fresh_engine()
+    reqs = [POOL[0], POOL[2], POOL[5], POOL[1], POOL[3]]
+    eng.serve_continuous(reqs, slots=2, chunk_steps=3, seed=0)
+    before = {n: s["programs"] for n, s in eng.compiles.snapshot().items()}
+    fresh = [RS2.randint(0, 100, r.shape[0]).astype(np.int32) for r in reqs]
+    eng.serve_continuous(fresh, slots=2, chunk_steps=3, seed=1)
+    after = {n: s["programs"] for n, s in eng.compiles.snapshot().items()}
+    assert after == before, (before, after)
+
+
+def test_retrace_continuous_battery_documented_budget(assert_trace_budget):
+    """The dense continuous-serving battery compiles exactly the documented
+    program count: ONE decode_chunk program (slot count and chunk size are
+    fixed; eos/budgets are traced), one admission-prefill program per
+    distinct (group size, pad bucket) pair, and keys_first per batch shape.
+    ``last_serve_stats["compiles"]`` exports the same snapshot."""
+    eng = fresh_engine()
+    reqs = [POOL[0], POOL[2], POOL[5], POOL[1], POOL[3]]
+    eng.serve_continuous(reqs, slots=2, chunk_steps=3, seed=0)
+    # cache_init is counted only on mesh runs (eager off-mesh), hence 0 here
+    assert_trace_budget(eng, {"decode_chunk": 1, "cache_init": 0})
+    snap = eng.last_serve_stats["compiles"]
+    assert snap == eng.compiles.snapshot()
+    assert snap["decode_chunk"]["traces"] == 1
+
+
+def test_retrace_paged_battery_documented_budget(assert_trace_budget):
+    """Paged serving adds the paged programs (gather_views, prefill_pages,
+    writeback_chunk) but keeps the same one-decode-program contract."""
+    eng = fresh_engine(paged=True, block_size=4, pool_blocks=40)
+    reqs = [POOL[0], POOL[2], POOL[5], POOL[1], POOL[3]]
+    eng.serve_continuous(reqs, slots=2, chunk_steps=3, seed=0)
+    assert_trace_budget(eng, {"decode_chunk": 1, "gather_views": 1,
+                              "writeback_chunk": 1})
+    snap = eng.last_serve_stats["compiles"]
+    assert snap["decode_chunk"]["programs"] == 1
+
+
 def test_scheduler_immediate_finish_on_admit():
     """Budget-1 (or first-token-EOS) requests finish at admission and the
     slot is reusable without ever entering a chunk."""
