@@ -8,10 +8,11 @@ tile choices) so future PRs have a perf trajectory to compare against.
 suites at reduced shapes (sets ``$KAN_SAS_BENCH_SMOKE=1``) and *fails*
 unless the written JSONs carry the sparse-path rows
 (``BENCH_kan_paths.json``), the continuous-engine rows
-(``BENCH_serve.json``), the paged-engine rows (``BENCH_prefix.json``), and
-both mesh columns (``BENCH_shard.json``) — the CI gates that keep the N:M
-sparse datapath, the continuous-batching engine, the paged KV subsystem,
-and mesh-native serving in the perf trajectory."""
+(``BENCH_serve.json``), the paged-engine rows (``BENCH_prefix.json``),
+both mesh columns (``BENCH_shard.json``), and the speculative rows
+(``BENCH_spec.json``) — the CI gates that keep the N:M sparse datapath,
+the continuous-batching engine, the paged KV subsystem, mesh-native
+serving, and the drafter+verify engine in the perf trajectory."""
 
 from __future__ import annotations
 
@@ -26,6 +27,7 @@ SERVE_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 PREFIX_JSON = os.path.join(os.path.dirname(__file__), "..",
                            "BENCH_prefix.json")
 SHARD_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_shard.json")
+SPEC_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
 
 
 def _check_sparse_rows(rep: dict) -> list[str]:
@@ -107,6 +109,29 @@ def _check_shard_rows(rep: dict) -> list[str]:
     return problems
 
 
+def _check_spec_rows(rep: dict) -> list[str]:
+    """The speculative rows every spec report must carry (CI smoke gate):
+    without them the trajectory silently loses the drafter+verify engine
+    and the acceptance-rate/useful-tok/s comparison vs spec_k=0."""
+    problems = []
+    if "tokens_per_s" not in rep.get("baseline", {}):
+        problems.append("baseline.tokens_per_s missing")
+    spec = rep.get("spec", {})
+    if not spec:
+        problems.append("spec rows missing")
+    for name, row in spec.items():
+        for key in ("tokens_per_s", "acceptance_rate",
+                    "speedup_vs_baseline", "windows"):
+            if key not in row:
+                problems.append(f"spec.{name}.{key} missing")
+    if "speedup_vs_baseline" not in rep.get("best", {}):
+        problems.append("best.speedup_vs_baseline missing")
+    if rep.get("programs_after_warmup"):
+        problems.append(
+            f"programs_after_warmup not empty: {rep['programs_after_warmup']}")
+    return problems
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
     if smoke:
@@ -123,6 +148,7 @@ def main() -> None:
         sa_sweep,
         serve_bench,
         shard_bench,
+        spec_bench,
         workloads,
     )
 
@@ -137,11 +163,13 @@ def main() -> None:
         ("serve", serve_bench),
         ("prefix", prefix_bench),
         ("shard", shard_bench),
+        ("spec", spec_bench),
         ("roofline", roofline),
     ]
     if smoke:
         suites = [("kanpaths", kan_paths), ("serve", serve_bench),
-                  ("prefix", prefix_bench), ("shard", shard_bench)]
+                  ("prefix", prefix_bench), ("shard", shard_bench),
+                  ("spec", spec_bench)]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in suites:
@@ -156,6 +184,7 @@ def main() -> None:
         (serve_bench, SERVE_JSON, _check_serve_rows, "SERVE"),
         (prefix_bench, PREFIX_JSON, _check_prefix_rows, "PREFIX"),
         (shard_bench, SHARD_JSON, _check_shard_rows, "SHARD"),
+        (spec_bench, SPEC_JSON, _check_spec_rows, "SPEC"),
     ]
     for mod, json_path, checker, label in gates:
         rep = getattr(mod.run, "last_report", None)

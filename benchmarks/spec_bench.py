@@ -1,0 +1,233 @@
+"""Speculative-decoding benchmark: the drafter+verify engine vs the plain
+continuous engine on the serve_bench skewed-output-length workload
+(``BENCH_spec.json``).
+
+Model: a 6-repeat reduced kanformer whose LATER repeats' output projections
+(``attn.wo``, ``kan.c2``/``kan.b2``) are damped by a small factor, so the
+residual stream — and the argmax — is dominated by the first repeats.  That
+makes the derived shallow drafter (``DraftModel.from_target``: the first
+``draft_layers`` repeats, sharing embed/unembed) a *good* approximation of
+the target, which is the regime speculation is built for.
+
+Two speedup columns, deliberately separate:
+
+- ``speedup_vs_baseline`` — *counted* useful tokens per full-depth target
+  pass, from the deterministic schedule: a window costs
+  ``1 + k * draft_layers / n_repeats`` pass-equivalents (one fused verify
+  + k drafter steps at ``draft_layers/n_repeats`` depth each) and emits up
+  to ``k+1`` tokens.  This is the metric that transfers to the paper's
+  regime, where decode is weight-streaming-bound and a fused k+1-position
+  verify pass costs about one sequential step on the systolic array.
+- ``wall_speedup_vs_baseline`` — host wall clock.  On this CPU it sits
+  BELOW 1x and that is expected, not a bug: the KAN row cost here is
+  linear in rows (measured: a 9-position ``verify_window`` costs ~9x one
+  ``decode_step``), so batching the verify buys nothing and speculation
+  pays the drafter on top.  Same honesty policy as ``BENCH_shard.json``'s
+  x0.16 tok/s: the host prices overhead, the counted column prices the
+  design.
+
+Outputs are bit-identical across every row (the §9 contract, enforced by
+``tests/test_speculative.py``) and asserted again here.  Timings are
+interleaved best-of-repeats; each engine warms its shapes first and the
+retrace sentinel (``programs_after_warmup``) must stay empty.
+
+``$KAN_SAS_BENCH_SMOKE=1`` shrinks the sweep and budgets for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+N_REPEATS = 6
+
+# later-repeat output projections scaled by this factor: front-loads the
+# model so a 1-2 repeat drafter tracks the 6-repeat target's argmax
+FRONT_LOAD = 0.05
+
+
+def _smoke() -> bool:
+    return os.environ.get("KAN_SAS_BENCH_SMOKE", "") not in ("", "0")
+
+
+def _workload():
+    if _smoke():
+        return dict(n_requests=8, slots=2, max_new=12, short=(2, 5),
+                    prompt_lo=4, prompt_hi=10, chunk_steps=4, reps=2,
+                    sweep=[(2, 1), (4, 1)])
+    return dict(n_requests=16, slots=4, max_new=32, short=(2, 8),
+                prompt_lo=4, prompt_hi=16, chunk_steps=8, reps=3,
+                sweep=[(2, 1), (4, 1), (8, 1), (2, 2), (4, 2), (8, 2)])
+
+
+def _front_loaded_params(model):
+    """init_params, then damp every repeat-after-the-first's contribution
+    to the residual stream (each block ADDS ``attn(x)`` and ``kan(x)``;
+    scaling their output projections scales exactly that addition)."""
+    from repro.models import lm
+
+    params = lm.init_params(jax.random.PRNGKey(0), model)
+    unit = []
+    for blk in params["unit"]:
+        blk = jax.tree.map(lambda a: a, blk)          # shallow copy tree
+        for grp, names in (("attn", ("wo",)), ("kan", ("c2", "b2"))):
+            for name in names:
+                leaf = blk[grp][name]
+                blk[grp][name] = leaf.at[1:].multiply(FRONT_LOAD)
+        unit.append(blk)
+    params["unit"] = unit
+    return params
+
+
+def run() -> list[tuple[str, float, str]]:
+    from repro.configs import kanformer_100m
+    from repro.serve.engine import Engine, ServeConfig
+
+    w = _workload()
+    arch = kanformer_100m.build(n_layers=N_REPEATS, d_model=64, n_heads=4,
+                                n_kv=4, kan_ff=96, vocab=512)
+    model = arch.model
+    params = _front_loaded_params(model)
+
+    rs = np.random.RandomState(0)
+    requests = [
+        rs.randint(1, model.vocab,
+                   rs.randint(w["prompt_lo"], w["prompt_hi"] + 1)).astype(np.int32)
+        for _ in range(w["n_requests"])
+    ]
+    budgets = [
+        int(rs.randint(w["short"][0], w["short"][1] + 1))
+        if rs.rand() < 0.75 else w["max_new"]
+        for _ in range(w["n_requests"])
+    ]
+    useful = float(sum(budgets))
+    max_seq = w["prompt_hi"] + w["max_new"] + 8
+    max_seq = -(-max_seq // 8) * 8
+
+    def make_engine(spec_k=0, draft_layers=1):
+        return Engine(params, model, ServeConfig(
+            max_seq=max_seq, max_new_tokens=w["max_new"],
+            paged=True, block_size=8,
+            spec_k=spec_k, draft_layers=draft_layers,
+        ))
+
+    def timed(eng):
+        t0 = time.time()
+        outs = eng.serve_continuous(requests, slots=w["slots"],
+                                    chunk_steps=w["chunk_steps"], seed=0,
+                                    max_new=budgets)
+        wall = time.time() - t0
+        return wall, outs, dict(eng.last_serve_stats)
+
+    # one engine per row (spec_k/draft_layers recompile anyway); warm every
+    # shape once, then interleave timed repeats across all engines and keep
+    # each row's best wall
+    engines = {"baseline": make_engine()}
+    for k, dl in w["sweep"]:
+        engines[f"k{k}_draft{dl}"] = make_engine(spec_k=k, draft_layers=dl)
+
+    warm, outs_by_row = {}, {}
+    for name, eng in engines.items():
+        _, outs, _ = timed(eng)
+        outs_by_row[name] = outs
+        warm[name] = {n: s["programs"]
+                      for n, s in eng.compiles.snapshot().items()}
+    # the §9 contract, spot-checked here too: every row emits the same ids
+    for name, outs in outs_by_row.items():
+        for a, b in zip(outs_by_row["baseline"], outs):
+            assert (a == b).all(), f"{name} diverged from baseline outputs"
+
+    best: dict[str, dict] = {}
+    for _ in range(w["reps"]):
+        for name, eng in engines.items():
+            wall, _, stats = timed(eng)
+            if name not in best or wall < best[name]["wall_s"]:
+                row = {"wall_s": wall, "tokens_per_s": useful / wall,
+                       "mean_slot_utilization": stats["mean_slot_utilization"],
+                       "chunks_run": stats["chunks_run"]}
+                if "spec" in stats:
+                    sp = stats["spec"]
+                    row.update(spec_k=sp["spec_k"],
+                               draft_layers=sp["draft_layers"],
+                               windows=sp["windows"],
+                               acceptance_rate=sp["acceptance_rate"],
+                               emitted_tokens=sp["emitted_tokens"])
+                best[name] = row
+
+    retraced: dict[str, int] = {}
+    for name, eng in engines.items():
+        end = {n: s["programs"] for n, s in eng.compiles.snapshot().items()}
+        for n in end:
+            if end[n] != warm[name].get(n, 0):
+                retraced[f"{name}.{n}"] = end[n] - warm[name].get(n, 0)
+
+    # counted pass accounting (deterministic, from the schedule): a window
+    # costs one full-depth verify pass + k drafter steps at dl/L depth per
+    # slot; a baseline chunk costs chunk_steps passes per slot.  Window
+    # emissions exclude the admission-prefill token, so subtract the same
+    # n_requests first tokens from the baseline's credit.
+    brow = best["baseline"]
+    base_passes = brow["chunks_run"] * w["chunk_steps"] * w["slots"]
+    base_tpp = (useful - w["n_requests"]) / base_passes
+    brow["target_pass_equivalents"] = base_passes
+    brow["useful_tokens_per_pass"] = base_tpp
+    base_tps = brow["tokens_per_s"]
+    for name, row in best.items():
+        if name == "baseline":
+            continue
+        cost = 1.0 + row["spec_k"] * row["draft_layers"] / N_REPEATS
+        passes = row["windows"] * w["slots"] * cost
+        row["target_pass_equivalents"] = passes
+        row["useful_tokens_per_pass"] = row["emitted_tokens"] / passes
+        row["speedup_vs_baseline"] = row["useful_tokens_per_pass"] / base_tpp
+        row["wall_speedup_vs_baseline"] = row["tokens_per_s"] / base_tps
+    spec_rows = {n: r for n, r in best.items() if n != "baseline"}
+    best_row = max(spec_rows, key=lambda n: spec_rows[n]["speedup_vs_baseline"])
+
+    rep = {
+        "workload": {
+            "n_requests": w["n_requests"],
+            "max_new": w["max_new"],
+            "budgets": budgets,
+            "prompt_lens": [int(r.shape[0]) for r in requests],
+            "skew": "75% short / 25% full-budget outputs",
+            "front_load_factor": FRONT_LOAD,
+            "model": f"kanformer {N_REPEATS}x(d64,h4,kv4,ff96) vocab512, "
+                     "front-loaded",
+            "smoke": _smoke(),
+        },
+        "baseline": brow,
+        "spec": spec_rows,
+        "best": {"row": best_row,
+                 "speedup_vs_baseline":
+                     spec_rows[best_row]["speedup_vs_baseline"],
+                 "wall_speedup_vs_baseline":
+                     spec_rows[best_row]["wall_speedup_vs_baseline"]},
+        "speedup_metric": (
+            "useful tokens per full-depth target pass, counted from the "
+            "schedule (window = 1 verify pass + k*draft_layers/"
+            f"{N_REPEATS} drafter passes); wall_* columns are host wall "
+            "clock, which on this CPU is row-linear (a k+1-position verify "
+            "costs ~k+1 decode steps) and therefore expected < 1x — see "
+            "module docstring / DESIGN.md §9"),
+        "outputs_bit_identical": True,   # asserted above, every row
+        "programs_after_warmup": retraced,
+    }
+    run.last_report = rep  # type: ignore[attr-defined]
+
+    out = [("spec.baseline", brow["wall_s"] * 1e6,
+            f"tok/s={base_tps:.1f} tok/pass={base_tpp:.2f}")]
+    for name, row in spec_rows.items():
+        out.append((f"spec.{name}", row["wall_s"] * 1e6,
+                    f"acc={row['acceptance_rate']:.3f} "
+                    f"tok/pass={row['useful_tokens_per_pass']:.2f} "
+                    f"x{row['speedup_vs_baseline']:.2f} "
+                    f"(wall x{row['wall_speedup_vs_baseline']:.2f})"))
+    out.append(("spec.best", 0.0,
+                f"{best_row} x{rep['best']['speedup_vs_baseline']:.2f} "
+                f"counted tok/pass "
+                f"retraced_after_warmup={sum(retraced.values())}"))
+    return out

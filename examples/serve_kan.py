@@ -40,9 +40,19 @@ def main(argv=None):
     ap.add_argument("--mesh", type=str, default=None, metavar="DxM",
                     help="serve on a (data, model) host mesh, e.g. 1x2 "
                          "(DESIGN.md §4); default: single device")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: drafts per verify window "
+                         "(0 disables; outputs bit-identical either way — "
+                         "DESIGN.md §9)")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="speculative: unit repeats kept in the drafter")
     args = ap.parse_args(argv)
     if args.shared_prefix and args.engine != "continuous":
         ap.error("--shared-prefix needs --engine continuous (paged KV)")
+    if args.spec_k < 0:
+        ap.error(f"--spec-k must be >= 0, got {args.spec_k}")
+    if args.spec_k > 0 and args.engine != "continuous":
+        ap.error("--spec-k needs --engine continuous")
 
     mesh = None
     if args.mesh is not None:
@@ -59,7 +69,8 @@ def main(argv=None):
     eng = Engine(params, arch.model,
                  ServeConfig(max_seq=96, max_new_tokens=16,
                              paged=args.shared_prefix, block_size=8,
-                             mesh=mesh))
+                             mesh=mesh, spec_k=args.spec_k,
+                             draft_layers=args.draft_layers))
     rs = np.random.RandomState(0)
     if args.shared_prefix:
         # system-prompt-heavy workload: 32 shared tokens, 3-8 unique ones
@@ -100,6 +111,12 @@ def main(argv=None):
                   f"prefill_tokens_saved={p['prefill_tokens_saved']}/{total} "
                   f"blocks_watermark={p['blocks_in_use_watermark']}"
                   f"/{p['pool_blocks'] - 1}")
+        if args.spec_k > 0:
+            sp = eng.last_serve_stats["spec"]
+            print(f"speculative: k={sp['spec_k']} "
+                  f"draft_layers={sp['draft_layers']} "
+                  f"acceptance_rate={sp['acceptance_rate']:.3f} "
+                  f"windows={sp['windows']}")
     for i, o in enumerate(outs[:3]):
         print(f"  req{i} prompt_len={len(requests[i])} -> {o[:8].tolist()}...")
 

@@ -53,6 +53,7 @@ TRANSPARENT_WRAPPERS = {"counting", "retrace.counting", "_count"}
 # (KV caches, block pools, gathered views).
 DONATABLE_PARAMS = {
     "cache", "caches", "pool", "pools", "view", "views", "kv", "cache_ckv",
+    "draft_caches",   # the speculative drafter's dense KV (DESIGN.md §9)
 }
 
 # KL102: host-readback callables and the sanctioned batch-transfer API.

@@ -10,8 +10,12 @@ utilization.  ``--paged`` (continuous only) switches the KV cache to the
 paged block pool with prefix caching and preemption (DESIGN.md §3b);
 ``--block-size``/``--pool-blocks`` shape the pool.  ``--mesh DxM`` serves
 on a (data, model) host mesh (DESIGN.md §4: params/KV sharded, outputs
-identical to the single-device engine).  Reduced (CPU-runnable) shapes are
-the default; ``--full`` selects the full production config.
+identical to the single-device engine).  ``--spec-k K`` (continuous only)
+turns on speculative decoding: a shrunken-KAN drafter (``--draft-layers``,
+optionally ``--draft-quant``) proposes K tokens per window and one fused
+verify pass scores them — outputs stay bit-identical to ``--spec-k 0``
+(DESIGN.md §9).  Reduced (CPU-runnable) shapes are the default; ``--full``
+selects the full production config.
 """
 
 from __future__ import annotations
@@ -61,6 +65,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "(requires that many host devices; force with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count). "
                          "Default: single-device engine")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="continuous: speculative decoding — drafts per "
+                         "verify window (0 disables; DESIGN.md §9). Outputs "
+                         "stay bit-identical to --spec-k 0")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="speculative: leading unit repeats kept in the "
+                         "derived drafter (1..n_repeats)")
+    ap.add_argument("--draft-quant", action="store_true",
+                    help="speculative: int8 fake-quantize the drafter "
+                         "weights (KANtize-style)")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -79,6 +93,22 @@ def main(argv=None) -> int:
               f"token path is exercised via mixed/embeddings archs in tests")
     if args.paged and args.engine != "continuous":
         print("[serve] --paged requires --engine continuous", file=sys.stderr)
+        return 2
+    if args.spec_k < 0:
+        print(f"[serve] --spec-k must be >= 0, got {args.spec_k}",
+              file=sys.stderr)
+        return 2
+    if args.spec_k > 0 and args.engine != "continuous":
+        print("[serve] --spec-k requires --engine continuous", file=sys.stderr)
+        return 2
+    if not (1 <= args.draft_layers <= model.n_repeats):
+        print(f"[serve] --draft-layers must be in [1, {model.n_repeats}] "
+              f"for {args.arch}, got {args.draft_layers}", file=sys.stderr)
+        return 2
+    if args.spec_k > 0 and not lm.model_supports_speculative(model):
+        print(f"[serve] {args.arch} does not support speculative decoding "
+              f"(needs token-input full-attention GQA blocks)",
+              file=sys.stderr)
         return 2
     params = lm.init_params(jax.random.PRNGKey(args.seed), model)
     max_seq = args.prompt_len + args.max_new + 8
@@ -99,7 +129,9 @@ def main(argv=None) -> int:
                     max_new_tokens=args.max_new, temperature=args.temperature,
                     eos_id=args.eos_id, paged=args.paged,
                     block_size=args.block_size, pool_blocks=args.pool_blocks,
-                    mesh=mesh),
+                    mesh=mesh, spec_k=args.spec_k,
+                    draft_layers=args.draft_layers,
+                    draft_quant=args.draft_quant),
     )
     rs = np.random.RandomState(args.seed)
     reqs = [
@@ -131,6 +163,13 @@ def main(argv=None) -> int:
                   f"prefix_hit_blocks={p.get('prefix_hit_blocks', 0)} "
                   f"prefill_tokens_saved={p['prefill_tokens_saved']} "
                   f"preemptions={s['n_preemptions']}")
+        if args.spec_k > 0:
+            sp = s["spec"]
+            print(f"[serve:spec] k={sp['spec_k']} "
+                  f"draft_layers={sp['draft_layers']} "
+                  f"windows={sp['windows']} "
+                  f"acceptance_rate={sp['acceptance_rate']:.3f} "
+                  f"emitted={sp['emitted_tokens']}")
     print("sample output ids:", outs[0][:10].tolist())
     return 0
 

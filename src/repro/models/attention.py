@@ -622,6 +622,172 @@ def attn_prefill_paged(
     return y, cache
 
 
+# ---------------------------------------------------------------------------
+# Speculative verify windows (DESIGN.md §9): score W = k+1 draft positions in
+# ONE batch-shaped pass against the live decode cache.  The whole point of
+# speculative decoding here is shape conversion — k sequential decode steps
+# (rows = B, the sparse/memory-bound regime) become one pass with B·W rows
+# (the fused-kernel regime) — so these entry points must NOT be a scan of
+# decode steps.  Bit-identity with the sequential path instead rests on the
+# same per-element-reduction argument the batch dimension already relies on:
+# the window axis ``t`` is carried as a pure batch axis through every einsum
+# (contractions stay over ``d`` / ``s`` with identical per-element lengths),
+# so position j of a window computes exactly the arrays decode step j would.
+# ---------------------------------------------------------------------------
+
+
+def _write_cache_span(
+    cache: dict, name: str, val: jax.Array, positions: jax.Array, quant: bool
+) -> dict:
+    """Scatter a (B, W) span of K or V into a dense ``(B, S, ...)`` cache at
+    per-row absolute ``positions``.  The W-token generalisation of
+    :func:`_write_cache`'s ragged branch; positions ``>= S`` drop (jax
+    scatter out-of-bounds semantics), mirroring the sentinel redirect of the
+    paged span write — fixed-shape windows may overrun ``max_seq`` on rows
+    that retire this window."""
+    b_idx = jnp.arange(val.shape[0])[:, None]
+    if quant:
+        qv, sc = _kv_quantize(val)                            # (B,W,KV,D)
+        cache[name] = cache[name].at[b_idx, positions].set(qv)
+        cache[name + "_scale"] = (
+            cache[name + "_scale"].at[b_idx, positions].set(sc)
+        )
+    else:
+        cache[name] = cache[name].at[b_idx, positions].set(
+            val.astype(cache[name].dtype)
+        )
+    return cache
+
+
+def _cache_attend_window(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, W, d_model)
+    cache: dict,                    # (B, S, ...) leaves — dense OR paged view
+    q: jax.Array,                   # (B, W, H, D) post-rotary queries
+    pos_b: jax.Array,               # (B,) window start positions
+) -> jax.Array:
+    """The verify-window attention *read*: :func:`_cache_attend` with the
+    window axis rode along as a batch axis.  Query j (absolute position
+    ``pos_b + j``) masks ``kv_slot <= pos_b + j`` — its own freshly written
+    slot included, exactly like the sequential step — and every reduction
+    (q·k over ``d``, softmax over ``S``, p·v over ``s``) keeps the decode
+    path's per-element operand length, so each window position reproduces
+    the sequential step's bits."""
+    B, W = q.shape[:2]
+    S = cache["k"].shape[1]
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // KV
+    qh = q.reshape(B, W, KV, rep, D)
+    q_pos = pos_b[:, None] + jnp.arange(W)[None, :]           # (B, W)
+    if not cfg.kv_quant:
+        ck = cache["k"].astype(x.dtype)
+        cv = cache["v"].astype(x.dtype)
+        s = jnp.einsum("btgrd,bsgd->btgrs", qh, ck) / math.sqrt(D)
+        mask = jnp.arange(S)[None, None, :] <= q_pos[:, :, None]   # (B,W,S)
+        s = jnp.where(mask[:, :, None, None, :], s.astype(jnp.float32), NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("btgrs,bsgd->btgrd", p.astype(cv.dtype), cv)
+        o = o.reshape(B, W, H, D).astype(x.dtype)
+        return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+    # int8 cache: the chunked flash-decode sweep with a W axis in the carry
+    chunk = min(8192, S)
+    n_chunks = (S + chunk - 1) // chunk
+    assert S % chunk == 0 or n_chunks == 1, "cache length is chunk-aligned"
+
+    def read_chunk(name, ci):
+        raw = jax.lax.dynamic_slice_in_dim(cache[name], ci * chunk, chunk, 1)
+        sc = jax.lax.dynamic_slice_in_dim(
+            cache[name + "_scale"], ci * chunk, chunk, 1
+        )
+        return (raw.astype(jnp.float32) * sc[..., None]).astype(x.dtype)
+
+    def step(carry, ci):
+        m_p, l_p, acc_p = carry
+        kb = read_chunk("k", ci)                              # (B,chunk,KV,D)
+        vb = read_chunk("v", ci)
+        s = jnp.einsum("btgrd,bsgd->btgrs", qh, kb) / math.sqrt(D)
+        kv_slot = ci * chunk + jnp.arange(chunk)
+        mask = kv_slot[None, None, :] <= q_pos[:, :, None]
+        s = jnp.where(mask[:, :, None, None, :], s.astype(jnp.float32), NEG_INF)
+        m_new = jnp.maximum(m_p, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_p - m_new)
+        l_new = l_p * corr + p.sum(-1)
+        acc = acc_p * corr[..., None] + jnp.einsum(
+            "btgrs,bsgd->btgrd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, W, KV, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, W, KV, rep), jnp.float32)
+    a0 = jnp.zeros((B, W, KV, rep, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    o = o.reshape(B, W, H, D)
+    return jnp.einsum("bthk,hkd->btd", o, params["wo"].astype(x.dtype))
+
+
+def attn_verify_window(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, W, d_model) — last token + k drafts
+    cache: dict,                    # dense (B, S, ...) leaves
+    pos: jax.Array,                 # (B,) window start (= next write slot)
+    shard=None,
+) -> tuple[jax.Array, dict]:
+    """W-token verify against the dense cache: write all W post-rotary K/V
+    spans (quantized when ``kv_quant`` — the sequential step also attends
+    its own freshly *quantized* write, so verify must too), then attend with
+    per-query causal masks.  Rejected positions leave garbage K/V at slots
+    ``>= pos + m``; the next window rewrites every such slot before any
+    query can reach it (its start ``pos'`` satisfies ``pos' + k >= pos + k``
+    and causality bounds reads at ``pos' + j``), so no rollback is needed."""
+    assert cfg.window is None and cfg.kv_lora_rank is None, (
+        "speculative verify supports full-attention GQA layers only"
+    )
+    B, W, _ = x.shape
+    pos_b = jnp.broadcast_to(pos, (B,))
+    positions = pos_b[:, None] + jnp.arange(W)[None, :]       # (B, W)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cache = dict(cache)
+    cache = _write_cache_span(cache, "k", k, positions, cfg.kv_quant)
+    cache = _write_cache_span(cache, "v", v, positions, cfg.kv_quant)
+    cache = _constrain_cache(cache, shard, paged=False)
+    y = _cache_attend_window(params, cfg, x, cache, q, pos_b)
+    return y, cache
+
+
+def attn_verify_window_paged(
+    params: dict,
+    cfg: AttnConfig,
+    x: jax.Array,                   # (B, W, d_model)
+    cache: dict,                    # POOL leaves (n_blocks, bs, ...)
+    table: jax.Array,               # (B, n_logical)
+    pos: jax.Array,                 # (B,)
+    shard=None,
+) -> tuple[jax.Array, dict]:
+    """W-token verify against the paged pool: span writes routed through the
+    block table (admission caps prefix reuse at ``(len-1)//bs`` full blocks,
+    so window writes can never land in a refcounted shared block — rejected
+    tokens only dirty request-exclusive blocks, which the engine trims from
+    coverage instead of CoW-copying), then the identical window attention
+    on the gathered logical view."""
+    assert cfg.window is None and cfg.kv_lora_rank is None, (
+        "paged KV supports full-attention GQA layers only"
+    )
+    B, W, _ = x.shape
+    pos_b = jnp.broadcast_to(pos, (B,))
+    positions = pos_b[:, None] + jnp.arange(W)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cache = dict(cache)
+    cache = paged_write_span(cache, "k", k, table, pos_b, pos_b + W, cfg.kv_quant)
+    cache = paged_write_span(cache, "v", v, table, pos_b, pos_b + W, cfg.kv_quant)
+    cache = _constrain_cache(cache, shard, paged=True)
+    y = _cache_attend_window(params, cfg, x, paged_view(cache, table), q, pos_b)
+    return y, cache
+
+
 def mla_decode_step(
     params: dict,
     cfg: AttnConfig,

@@ -437,3 +437,45 @@ def block_decode_step(
     if shard is not None:
         cache = shard.constrain_tree(cache, block_cache_axes(blk))
     return x + y, cache
+
+
+def block_verify_window(
+    params: dict,
+    blk: BlockCfg,
+    x: jax.Array,               # (B, W, d) — last accepted token + k drafts
+    cache: dict,
+    pos: jax.Array,             # (B,) window start positions
+    table: jax.Array | None = None,   # (B, n_logical): paged block table
+    shard=None,                 # optional ShardingCtx (mesh serving)
+) -> tuple[jax.Array, dict]:
+    """Speculative verify: :func:`block_decode_step` for a W-token window in
+    one batch-shaped pass.  Restricted to the paged-capable block set (full
+    attention GQA) — ring buffers and recurrent states are inherently
+    sequential in the window dimension.  The FFN sees ``B·W`` rows, so
+    ``method="auto"`` resolves to the *fused* kernel regime on TPU — the
+    shape conversion speculative decoding exists to buy (DESIGN.md §9)."""
+    if not block_supports_paging(blk):
+        raise NotImplementedError(
+            f"speculative verify: unsupported kind {blk.kind!r} "
+            "(full-attention GQA layers only)"
+        )
+    h = L.rmsnorm(params["ln1"], x)
+    c = blk.attn
+    if table is not None:
+        y, cache = A.attn_verify_window_paged(
+            params["attn"], c, h, cache, table, pos, shard=shard
+        )
+    else:
+        y, cache = A.attn_verify_window(
+            params["attn"], c, h, cache, pos, shard=shard
+        )
+    x = x + y
+    h2 = L.rmsnorm(params["ln2"], x)
+    if blk.kind == "attn_mlp":
+        x = x + _mlp(params["mlp"], h2)
+    elif blk.kind == "attn_moe":
+        y2, _ = M.moe_forward(params["moe"], blk.moe, h2)
+        x = x + y2
+    else:
+        x = x + _kan_ffn(params["kan"], h2, blk.kan_grid, method="auto")
+    return x, cache

@@ -252,6 +252,14 @@ def model_supports_paging(cfg: ModelConfig) -> bool:
     return all(B.block_supports_paging(b) for b in blks)
 
 
+def model_supports_speculative(cfg: ModelConfig) -> bool:
+    """Speculative verify needs every block to accept a W-token window in
+    one batch-shaped pass — the same full-attention GQA condition paging
+    needs (ring buffers and recurrent states are sequential in the window
+    dim), plus token inputs (the drafter re-embeds accepted tokens)."""
+    return model_supports_paging(cfg) and cfg.input_kind == "tokens"
+
+
 def model_kv_quant(cfg: ModelConfig) -> bool:
     """True if any attention block stores an int8-quantized KV cache."""
     blks = cfg.prologue + cfg.unit + cfg.epilogue + cfg.shared
@@ -410,25 +418,44 @@ def writeback_paged_chunk(
     )
 
 
-def copy_paged_block(caches: dict, src, dst, shard=None) -> dict:
-    """Device-side copy of physical block ``src`` -> ``dst`` in every pool
-    leaf — the data half of copy-on-write (``kv_pool.BlockPool.copy_on_write``
-    rebinds the table; this copies the KV payload).  ``src``/``dst`` may be
-    traced scalars; one jitted program serves every pair."""
-    src = jnp.asarray(src, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
+def copy_paged_blocks(caches: dict, srcs, dsts, shard=None) -> dict:
+    """Device-side copy of physical blocks ``srcs[i] -> dsts[i]`` in every
+    pool leaf — the data half of copy-on-write
+    (``kv_pool.BlockPool.copy_on_write`` rebinds the table; this copies the
+    KV payload).  The whole batch of copies lowers to ONE gather + ONE
+    scatter per leaf, so an admission wave's CoW copies cost two dispatches
+    per leaf instead of ``2n`` dynamic slices (the ROADMAP "sharded
+    prefix-cache block copies" note: under a mesh the batched scatter keeps
+    the pool's ``kv_blocks`` sharding with a single collective round).
+
+    ``srcs``/``dsts`` are length-``n`` int32 vectors (traced OK — one jitted
+    program serves every same-``n`` wave; callers bucket by wave size).
+    ``dsts`` must be pairwise distinct: duplicate scatter targets apply in
+    unspecified order.  The pool allocator guarantees this — freshly
+    CoW-allocated blocks are unique by construction."""
+    srcs = jnp.reshape(jnp.asarray(srcs, jnp.int32), (-1,))
+    dsts = jnp.reshape(jnp.asarray(dsts, jnp.int32), (-1,))
 
     def copy_leaf(key, pool, stacked: bool):
         # unit pools carry a leading layers axis, so their block axis is 1;
         # prologue/epilogue pools index blocks at axis 0
         ax = 1 if stacked else 0
-        blk = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=ax)
-        out = jax.lax.dynamic_update_slice_in_dim(pool, blk, dst, axis=ax)
+        blks = jnp.take(pool, srcs, axis=ax)
+        out = pool.at[:, dsts].set(blks) if stacked else pool.at[dsts].set(blks)
         if shard is not None:
             out = shard.constrain(out, _leaf_names(A.POOL_CACHE_AXES, key, stacked))
         return out
 
     return _map_paged_leaves(caches, copy_leaf)
+
+
+def copy_paged_block(caches: dict, src, dst, shard=None) -> dict:
+    """Single-pair :func:`copy_paged_blocks` (kept for the fork/beam-search
+    CoW primitive's call sites and tests)."""
+    return copy_paged_blocks(
+        caches, jnp.reshape(jnp.asarray(src, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(dst, jnp.int32), (1,)), shard,
+    )
 
 
 def prefill(
@@ -784,6 +811,85 @@ def decode_step(
 
     h = L.rmsnorm(params["final_ln"], h)
     logits = L.unembed_logits(params["embed"], h)[:, 0]
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits, new_caches
+
+
+def verify_window(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,           # (B, W) int32: last accepted token + k drafts
+    caches: dict,
+    pos: jax.Array,              # (B,) window start positions
+    compute_dtype=jnp.bfloat16,
+    table: jax.Array | None = None,   # (B, n_logical): paged block tables
+    shard=None,
+) -> tuple[jax.Array, dict]:
+    """Speculative verification: score all ``W = k + 1`` window positions of
+    every row in ONE pass -> ``(logits (B, W, vocab) fp32, caches)``.
+
+    ``logits[:, j]`` is the next-token distribution after the token at
+    absolute position ``pos + j`` — exactly what ``decode_step`` would
+    return at step ``j`` of a sequential chunk, provided the window prefix
+    matches the sequential stream (the acceptance rule's induction,
+    ``serve/speculative.py``).  Structure mirrors :func:`decode_step`
+    (scan-over-repeats on the same stacked caches) with
+    :func:`~repro.models.blocks.block_verify_window` per block; the per-row
+    accepted length is applied by the CALLER — the model writes all W
+    positions and the engine's rollback invariants make rejected writes
+    unobservable (DESIGN.md §9)."""
+    if not model_supports_speculative(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: speculative verify needs token-input full-attention "
+            "GQA blocks throughout"
+        )
+    d = cfg.d_model
+    h = L.embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(d)
+    shared = params.get("shared", [])
+    new_caches: dict = {}
+
+    if cfg.prologue:
+        ncs = []
+        for p_blk, blk, c in zip(params["prologue"], cfg.prologue, caches["prologue"]):
+            h, c2 = B.block_verify_window(p_blk, blk, h, c, pos, table, shard)
+            ncs.append(c2)
+        new_caches["prologue"] = ncs
+
+    def unit_body(carry, xs):
+        h_c = carry
+        rep_params, rep_caches = xs
+        new_rep = []
+        for i, blk in enumerate(cfg.unit):
+            p = shared[blk.shared_id] if blk.shared_id is not None else rep_params[i]
+            h_c, c2 = B.block_verify_window(
+                p, blk, h_c, rep_caches[i], pos, table, shard
+            )
+            new_rep.append(c2)
+        return h_c, new_rep
+
+    if cfg.scan_layers:
+        h, new_unit = jax.lax.scan(unit_body, h, (params["unit"], caches["unit"]))
+    else:
+        reps = []
+        for r in range(cfg.n_repeats):
+            rep_p = jax.tree.map(lambda a: a[r], params["unit"])
+            rep_c = jax.tree.map(lambda a: a[r], caches["unit"])
+            h, nc = unit_body(h, (rep_p, rep_c))
+            reps.append(nc)
+        new_unit = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    new_caches["unit"] = new_unit
+
+    if cfg.epilogue:
+        ncs = []
+        for p_blk, blk, c in zip(params["epilogue"], cfg.epilogue, caches["epilogue"]):
+            h, c2 = B.block_verify_window(p_blk, blk, h, c, pos, table, shard)
+            ncs.append(c2)
+        new_caches["epilogue"] = ncs
+
+    h = L.rmsnorm(params["final_ln"], h)
+    logits = L.unembed_logits(params["embed"], h)
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits / c)

@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.analysis.retrace import RetraceRegistry, counting
 from repro.models import lm
+from repro.serve import speculative
 from repro.serve.kv_pool import BlockPool, blocks_for, worst_case_blocks
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import ContinuousScheduler
@@ -118,6 +119,19 @@ class ServeConfig:
     # bit-identical to it.  All host-side bookkeeping (scheduler,
     # BlockPool, PrefixCache) is device-count-agnostic.
     mesh: object | None = None
+    # Speculative decoding (DESIGN.md §9, serve/speculative.py): a shrunken
+    # KAN drafter proposes spec_k tokens per window and ONE fused
+    # verification pass scores all spec_k + 1 positions — batch-shaped work
+    # that resolves to the fused kernel path instead of spec_k + 1 starved
+    # single-token decode dispatches.  Outputs stay bit-identical to
+    # spec_k = 0 (greedy AND temperature > 0): the verifier samples the
+    # target chain at every window position with the request's own PRNG
+    # chain and only ever emits those samples.  serve_continuous only.
+    spec_k: int = 0              # drafts per window; 0 disables speculation
+    draft: object | None = None  # a speculative.DraftModel; None derives one
+                                 # from the target checkpoint at engine init
+    draft_layers: int = 1        # derived drafter: leading unit repeats kept
+    draft_quant: bool = False    # derived drafter: int8 fake-quant weights
 
 
 class Engine:
@@ -237,6 +251,46 @@ class Engine:
             static_argnums=(4,),
             donate_argnums=(0,),           # pools update in place
         )
+        # ---- speculative decoding (DESIGN.md §9, serve/speculative.py) ----
+        if serve_cfg.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {serve_cfg.spec_k}")
+        if serve_cfg.spec_k >= 1:
+            self.draft = (
+                serve_cfg.draft
+                if serve_cfg.draft is not None
+                else speculative.DraftModel.from_target(
+                    self.params, model_cfg,
+                    n_layers=serve_cfg.draft_layers,
+                    quant=serve_cfg.draft_quant,
+                )
+            )
+        else:
+            self.draft = None
+        # drafter weights are EXPLICIT jit arguments everywhere below —
+        # closing over them would bake the whole drafter into each program
+        # as XLA constants (re-staged per trace, resident per executable)
+        self._draft_chunk = jax.jit(
+            _count(self._draft_impl, "draft_chunk"),
+            static_argnums=(0,), donate_argnums=(3,),
+        )
+        self._verify = _jit(
+            _count(self._verify_impl, "verify_window"),
+            param_argnum=0, n_args=10,
+            donate_argnums=(3,),           # target caches update in place
+        )
+        # drafter admission prefill: the drafter keeps a dense per-slot
+        # cache even under the paged target (its whole cache costs
+        # draft_layers / n_repeats of ONE dense target cache), so admission
+        # always prefills the FULL prompt into its row — prefix-cache hits
+        # only skip target-side compute
+        self._draft_prefill = jax.jit(
+            _count(lambda p, toks, lengths, slots, draft_caches:
+                   lm.prefill_into_slots(
+                       p, self.draft.cfg, toks, lengths, slots, draft_caches,
+                       self.cfg.max_seq, self._dt, shard,
+                   ), "draft_prefill"),
+            donate_argnums=(4,),
+        )
 
     # ------------------------------------------------------------------
     # cache construction: on a mesh the trees are built under jit with
@@ -304,13 +358,12 @@ class Engine:
         return pairs[:, 0], self._sample(last_logits, pairs[:, 1])
 
     def _sample(self, logits: jax.Array, step_keys: jax.Array) -> jax.Array:
-        """logits (B, vocab), step_keys (B, 2) — one key per row."""
-        if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        t = self.cfg.temperature
-        return jax.vmap(
-            lambda k, lg: jax.random.categorical(k, lg / t)
-        )(step_keys, logits).astype(jnp.int32)
+        """logits (B, vocab), step_keys (B, 2) — one key per row.  Delegates
+        to the ONE sampling definition (speculative.sample_tokens) shared
+        with the draft loop and the verifier, so the speculative acceptance
+        rule compares like with like, bit for bit."""
+        return speculative.sample_tokens(logits, step_keys,
+                                         self.cfg.temperature)
 
     def _validate_request(self, rid, prompt_len: int, max_new: int) -> None:
         """Per-request admission validation (clear errors instead of a
@@ -366,6 +419,50 @@ class Engine:
             body, (tok0, caches, pos0, keys0, eos_hit0), None, length=steps
         )
         return toks, tok, caches, pos, keys, eos_hit   # toks: (steps, B)
+
+    # ------------------------------------------------------------------
+    # speculative decoding (DESIGN.md §9)
+    # ------------------------------------------------------------------
+
+    def _draft_impl(self, k, dparams, tok, draft_caches, pos, keys, eos_hit):
+        """One draft window: ``k`` (static) cheap drafter decode steps
+        proposing candidate tokens per live row, sampling with the same
+        chain keys the verifier will replay against the target."""
+        return speculative.draft_propose(
+            dparams, self.draft.cfg, k, tok, draft_caches, pos, keys,
+            eos_hit, self.cfg.temperature, self._dt, self.shard,
+        )
+
+    def _verify_impl(self, params, tok, draft, caches, pos, keys, eos_hit,
+                     eos_id, pad_id, table=None):
+        """Fused verification: score all ``W = k + 1`` window positions in
+        ONE target forward (``lm.verify_window`` — B·W rows resolve to the
+        fused kernel path), sample the target chain at every position with
+        the request's own key chain, and accept the longest matching draft
+        prefix plus the bonus token.  Returns ``(emitted (B, W), m (B,),
+        tok', caches, pos', keys', eos')`` — the full decode carry advanced
+        by exactly the ``m`` accepted emissions, bitwise the state the
+        sequential chunk would carry after ``m`` steps."""
+        B, k = draft.shape
+        W = k + 1
+        x = jnp.concatenate([tok, draft], axis=1)            # (B, W)
+        logits, caches = lm.verify_window(
+            params, self.model, x, caches, pos, self._dt, table, self.shard
+        )
+        kts, chains = speculative.split_chain(keys, W)
+        t = speculative.sample_tokens(
+            logits.reshape(B * W, -1), kts.reshape(B * W, 2),
+            self.cfg.temperature,
+        ).reshape(B, W)
+        emitted, m, eos_new = speculative.accept_window(
+            draft, t, eos_hit, eos_id, pad_id
+        )
+        # resume the chain after exactly m splits; tok' = last real emission
+        keys_new = jnp.take_along_axis(chains, m[:, None, None], axis=1)[:, 0]
+        last = jnp.take_along_axis(emitted, jnp.maximum(m - 1, 0)[:, None], 1)
+        tok_new = jnp.where((m > 0)[:, None], last, tok)
+        pos_new = pos + m
+        return emitted, m, tok_new, caches, pos_new, keys_new, eos_new
 
     def generate(
         self,
@@ -579,6 +676,12 @@ class Engine:
         for rid, (r, m) in enumerate(zip(requests, budgets)):
             self._validate_request(rid, int(r.shape[0]), m)
         assert chunk_steps >= 1 and slots >= 1
+        spec_k = self.cfg.spec_k
+        spec = spec_k >= 1
+        W = spec_k + 1              # verify-window width (drafts + bonus)
+        # device write span per decode round: a spec window writes
+        # pos..pos+W-1 (tok + k drafts), a plain chunk pos..pos+chunk_steps-1
+        steps_cov = W if spec else chunk_steps
 
         sched = ContinuousScheduler(slots, range(n))
         paged = self.cfg.paged
@@ -608,7 +711,8 @@ class Engine:
             # otherwise-empty pool, so preemption can always make progress
             for rid, (r, m) in enumerate(zip(requests, budgets)):
                 need = worst_case_blocks(
-                    int(r.shape[0]), m, chunk_steps, bs_blk, self.cfg.max_seq
+                    int(r.shape[0]), m, chunk_steps, bs_blk, self.cfg.max_seq,
+                    spec_k=spec_k,
                 )
                 if need > pool.usable:
                     raise ValueError(
@@ -635,6 +739,14 @@ class Engine:
         else:
             prefix = None
             caches = self._make_dense_caches(slots)
+        # drafter KV: always dense per-slot rows, draft_layers deep — its
+        # whole footprint is draft_layers / n_repeats of ONE dense target
+        # cache, the HBM cost of speculation (DESIGN.md §9)
+        draft_caches = (
+            lm.init_caches(self.draft.cfg, slots, self.cfg.max_seq, self._dt)
+            if spec else None
+        )
+        spec_stats = {"windows": 0, "proposed": 0, "accepted": 0, "emitted": 0}
         # host mirrors of the per-slot device state fed to each chunk
         tok = np.zeros((slots, 1), np.int32)
         pos = np.zeros((slots,), np.int32)
@@ -681,7 +793,7 @@ class Engine:
                     eos_hit[b] = False
 
         def admit_all():
-            nonlocal caches
+            nonlocal caches, draft_caches
             while True:
                 ready = sched.admit_ready()
                 if not ready:
@@ -710,6 +822,15 @@ class Engine:
                     last, caches = self._prefill_insert(
                         self.params, padded, lens, slots_a, caches
                     )
+                    if spec:
+                        # drafter cache row enters lockstep here: admission
+                        # overwrites the whole row, so slot recycling and
+                        # preemption-with-recompute can never leak a prior
+                        # occupant's drafter KV into a new request
+                        _, draft_caches = self._draft_prefill(
+                            self.draft.params, padded, lens, slots_a,
+                            draft_caches,
+                        )
                     activate_group(grp, lens, last)
 
         # ---------------------- paged-mode machinery ----------------------
@@ -745,7 +866,7 @@ class Engine:
             return True
 
         def admit_all_paged():
-            nonlocal caches
+            nonlocal caches, draft_caches
             while True:
                 ready = sched.admit_ready()
                 if not ready:
@@ -808,6 +929,20 @@ class Engine:
                         self.params, suffix, jnp.asarray(lens), tbls, caches,
                         jnp.int32(start), blocks_for(start + t_pad, bs_blk),
                     )
+                    if spec:
+                        # the drafter has no paged pool and no prefix cache:
+                        # prefill its dense row with the FULL prompt (target
+                        # prefix hits only skip target-side compute).
+                        # start + t_pad is group-constant, so one dispatch
+                        full = np.stack([
+                            np.pad(requests[rid], (0, start + t_pad - L))
+                            for _, rid, L, _ in grp
+                        ]).astype(np.int32)
+                        slots_a = np.asarray([b for b, *_ in grp], np.int32)
+                        _, draft_caches = self._draft_prefill(
+                            self.draft.params, full, lens, slots_a,
+                            draft_caches,
+                        )
                     # register the freshly computed full prompt blocks so
                     # later admissions can reuse them (first writer wins)
                     if prefix is not None:
@@ -834,7 +969,7 @@ class Engine:
                 if not s.occupied or s.eos_hit:
                     continue   # preempted/retired meanwhile
                 want = blocks_for(
-                    min(int(pos[b]) + chunk_steps, self.cfg.max_seq), bs_blk
+                    min(int(pos[b]) + steps_cov, self.cfg.max_seq), bs_blk
                 )
                 need = int(want - covered[b])
                 if need <= 0:
@@ -859,6 +994,70 @@ class Engine:
             if paged and tables_dev["dirty"]:
                 tables_dev["arr"] = jnp.asarray(tables)
                 tables_dev["dirty"] = False
+            if spec:
+                # one window: k drafter steps, then ONE fused verify pass
+                pos0 = jnp.asarray(pos)
+                tok0 = jnp.asarray(tok)
+                keys0 = jnp.asarray(keys)
+                eos0 = jnp.asarray(eos_hit)
+                draft, draft_caches = self._draft_chunk(
+                    spec_k, self.draft.params, tok0, draft_caches, pos0,
+                    keys0, eos0,
+                )
+                if paged and self.cfg.paged_read == "shadow":
+                    view = self._gather_views(caches, tables_dev["arr"])
+                    emitted_d, m_d, tok_l, view, pos_l, keys_l, eos_l = (
+                        self._verify(
+                            self.params, tok0, draft, view, pos0, keys0,
+                            eos0, eos_a, pad_a, None,
+                        )
+                    )
+                    caches = self._writeback_chunk(
+                        caches, view, tables_dev["arr"], pos0, W
+                    )
+                else:
+                    emitted_d, m_d, tok_l, caches, pos_l, keys_l, eos_l = (
+                        self._verify(
+                            self.params, tok0, draft, caches, pos0, keys0,
+                            eos0, eos_a, pad_a,
+                            tables_dev["arr"] if paged else None,
+                        )
+                    )
+                emitted_h, m_h, tok, pos, keys, eos_hit = [
+                    np.array(a) for a in jax.device_get(
+                        (emitted_d, m_d, tok_l, pos_l, keys_l, eos_l)
+                    )
+                ]
+                # emitted rows carry no post-EOS pads inside m (accept_window
+                # truncates at EOS), so useful == n_keep — no eos_steps pass
+                spec_stats["windows"] += 1
+                for b, rid, n_keep, finished in sched.complete_spec_window(
+                    W, m_h, eos_hit
+                ):
+                    spec_stats["proposed"] += spec_k
+                    spec_stats["accepted"] += max(0, min(int(m_h[b]) - 1,
+                                                         spec_k))
+                    spec_stats["emitted"] += n_keep
+                    bufs[rid].extend(int(t) for t in emitted_h[b, :n_keep])
+                    if finished:
+                        finalize(rid)
+                        sched.retire(b)
+                        if paged:
+                            release_slot_blocks(b)
+                        eos_hit[b] = True
+                if paged:
+                    # roll back rejected coverage: blocks past the accepted
+                    # frontier are request-exclusive FRESH blocks (admission
+                    # caps prefix reuse below blocks_for(pos')), so the trim
+                    # frees them outright — no CoW, no device copy
+                    for b in sched.table.live_slots():
+                        keep = blocks_for(int(pos[b]), bs_blk)
+                        if keep < covered[b]:
+                            pool.trim_request(int(slot_rid[b]), keep)
+                            tables[b, keep:] = 0
+                            tables_dev["dirty"] = True
+                            covered[b] = keep
+                continue
             if paged and self.cfg.paged_read == "shadow":
                 # gather once per chunk, dense-scan the view, write the
                 # chunk's span back — per-step decode cost equals dense
@@ -915,6 +1114,19 @@ class Engine:
             "mesh_shape": dict(self.shard.mesh.shape) if self.shard else None,
             "compiles": self.compiles.snapshot(),
         }
+        if spec:
+            self.last_serve_stats["spec"] = {
+                "spec_k": spec_k,
+                "draft_layers": self.draft.n_layers,
+                "draft_quant": self.draft.quant,
+                "windows": spec_stats["windows"],
+                "proposed_drafts": spec_stats["proposed"],
+                "accepted_drafts": spec_stats["accepted"],
+                "acceptance_rate": (
+                    spec_stats["accepted"] / max(spec_stats["proposed"], 1)
+                ),
+                "emitted_tokens": spec_stats["emitted"],
+            }
         if paged:
             # after drain every block is free or prefix-cache-held (rc 1):
             # leaked blocks / unbalanced refcounts fail loudly here, and the

@@ -43,7 +43,7 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 def worst_case_blocks(
     prompt_len: int, max_new: int, chunk_steps: int, block_size: int,
-    max_seq: int,
+    max_seq: int, spec_k: int = 0,
 ) -> int:
     """Upper bound on blocks a single request can ever hold.
 
@@ -55,7 +55,17 @@ def worst_case_blocks(
     sentinel block.  Engine admission validates every request against this
     bound so a single request can always run on an otherwise-empty pool
     (preemption can then always make progress).
+
+    Speculative mode (``spec_k >= 1``) does NOT share the chunk bound: a
+    verify window starting at the last live position (``prompt_len +
+    max_new - 2``, just before the final emission) writes ``spec_k`` draft
+    positions past it, and coverage is trimmed back only *after* the
+    window.  The supremum written position is therefore
+    ``prompt_len + max_new - 1 + spec_k`` (again clamped to ``max_seq``).
     """
+    if spec_k >= 1:
+        hi = min(prompt_len + max_new - 1 + spec_k, max_seq)
+        return blocks_for(hi, block_size)
     n_chunks = blocks_for(max(max_new - 1, 0), chunk_steps)  # ceil-div
     hi = min(prompt_len + n_chunks * chunk_steps, max_seq)
     return blocks_for(hi, block_size)
@@ -142,6 +152,40 @@ class BlockPool:
             if self._ref[b] == 0:
                 self._free.append(b)
                 freed.append(b)
+        return freed
+
+    def trim_request(self, rid: int, keep: int) -> list[int]:
+        """Roll back ``rid``'s table to its first ``keep`` blocks, releasing
+        the tail (speculative rejection: the verify window over-covered
+        positions the accepted prefix never reached — DESIGN.md §9).
+
+        The tail is always *request-exclusive fresh* blocks, never shared
+        prefix: admission caps prefix reuse at ``(len - 1) // block_size``
+        full blocks, so the shared-block count is at most
+        ``blocks_for(prompt_len)``, and the engine only trims to
+        ``keep = blocks_for(pos')`` with ``pos' >= prompt_len`` — shared
+        blocks all sit at table indices ``< keep``.  Asserted below: a
+        trimmed block must be exclusively ours (refcount drops to zero, the
+        block frees immediately — rollback needs no CoW and no device copy;
+        the garbage KV inside is unreachable once the table entry is gone).
+        Returns the freed blocks.
+        """
+        table = self._owned.get(rid, [])
+        assert 0 <= keep <= len(table), (rid, keep, len(table))
+        freed = []
+        for b in table[keep:]:
+            assert b != SENTINEL and b not in self._cache_held, (
+                f"trim would release shared/cached block {b} of request {rid}"
+            )
+            self._ref[b] -= 1
+            assert self._ref[b] == 0, (
+                f"trimmed block {b} still referenced (ref={self._ref[b]})"
+            )
+            self._free.append(b)
+            freed.append(b)
+        del table[keep:]
+        if not table:
+            self._owned.pop(rid, None)
         return freed
 
     # --------------------------- prefix-cache refs -------------------------

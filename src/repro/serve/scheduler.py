@@ -246,6 +246,45 @@ class ContinuousScheduler:
             out.append((b, s.request_id, n_keep, finished))
         return out
 
+    def complete_spec_window(
+        self, window_steps: int, emitted_counts, eos_hits, eos_steps=None
+    ) -> list[tuple[int, int, int, bool]]:
+        """Account for one finished speculative window (DESIGN.md §9).
+
+        Unlike :meth:`complete_chunk` — where every live slot advances by
+        exactly ``chunk_steps`` — a verify window emits a *variable* number
+        of tokens per row: ``emitted_counts[b]`` is the device's accepted
+        count ``m`` (matched drafts + the bonus token, truncated at an
+        in-window EOS; 0 for latched rows).  A row keeps
+        ``min(m, remaining)`` of them — the window can overshoot the budget
+        on its last emission, so the host clamp is what retires the row.
+        ``total_token_steps`` charges the full ``window_steps = k + 1``
+        per occupied slot (the capacity the window *could* have emitted):
+        rejected drafts are exactly the waste ``mean_slot_utilization``
+        should see, making the stat comparable across spec and non-spec
+        runs.  ``eos_steps`` has :meth:`complete_chunk` semantics over the
+        emitted window rows.  Returns ``(slot, request_id, n_keep,
+        finished)`` per occupied slot.
+        """
+        out: list[tuple[int, int, int, bool]] = []
+        self.chunks_run += 1
+        self.total_token_steps += window_steps * len(self.table)
+        for b in self.table.occupied_slots():
+            s = self.table.slots[b]
+            n_keep = min(int(emitted_counts[b]), s.remaining)
+            hit = bool(eos_hits[b])
+            s.remaining -= n_keep
+            s.pos += n_keep
+            s.eos_hit = s.eos_hit or hit
+            useful = n_keep
+            if eos_steps is not None:
+                useful = min(useful, int(eos_steps[b]) + 1)
+            self.useful_token_steps += useful
+            s.useful_steps += useful
+            finished = hit or s.remaining == 0
+            out.append((b, s.request_id, n_keep, finished))
+        return out
+
     # ---------------------------- observability ----------------------------
 
     def mean_slot_utilization(self) -> float:
